@@ -1,0 +1,48 @@
+"""Benchmark entry point: one module per paper table/figure + the
+dry-run roofline summary. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --fast     # skip the search
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the RL search benchmark (slowest)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_fig5, paper_fig7, paper_table45, tpu_hetero
+    modules = [paper_fig5, paper_fig7, paper_table45, tpu_hetero]
+    if not args.fast:
+        from benchmarks import paper_fig9_12, paper_table3
+        modules.append(paper_table3)
+        modules.append(paper_fig9_12)
+    # roofline rows only exist after a dry-run sweep has been captured
+    try:
+        from benchmarks import roofline
+        modules.append(roofline)
+    except Exception:                                  # pragma: no cover
+        pass
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        try:
+            for row in mod.main():
+                print(",".join(str(x) for x in row))
+                sys.stdout.flush()
+        except Exception:                              # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

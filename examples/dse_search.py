@@ -1,0 +1,38 @@
+"""Run the paper's RL-based design-space exploration end to end.
+
+Searches the N3H-Core configuration (hardware knobs + per-layer
+bit-widths; split ratios solved analytically per Eq. 12) for ResNet-18
+on XC7Z020 under a latency target, then prints the Table-3-style row
+and the per-layer bit-width/ratio profile (the Fig. 9 analogue).
+
+  PYTHONPATH=src python examples/dse_search.py --episodes 60 --target 35
+"""
+import argparse
+
+from repro.dse.search import run_search
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default="resnet18")
+    ap.add_argument("--device", default="XC7Z020")
+    ap.add_argument("--target", type=float, default=35.0)
+    ap.add_argument("--episodes", type=int, default=60)
+    args = ap.parse_args()
+
+    res = run_search(network=args.network, device=args.device,
+                     target_latency_ms=args.target,
+                     episodes=args.episodes, verbose=True)
+    print("\nsearched configuration (Table 3 row):")
+    for k, v in res.table3_row().items():
+        print(f"  {k:12s} {v}")
+    info = res.best_info
+    print("\nper-layer profile (Fig. 9 analogue):")
+    print(f"  {'layer':>5s} {'B_w-L':>6s} {'B_a':>4s} {'ratio':>6s}")
+    for i, (bw, ba, r) in enumerate(zip(info["bw_lut"], info["ba"],
+                                        info["ratios"])):
+        print(f"  {i:5d} {bw:6d} {ba:4d} {r:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

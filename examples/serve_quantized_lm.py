@@ -1,0 +1,85 @@
+"""Serve a small LM with batched requests — the paper's kind of driver.
+
+The paper is an inference accelerator, so the dictated end-to-end
+driver is serving: this example initializes a llama-family model,
+enables the paper's hybrid quantization on every projection, and runs
+batched prefill + greedy decode over a synthetic request queue,
+reporting latency & throughput per phase (and comparing quantized vs
+fp output agreement).
+
+  PYTHONPATH=src python examples/serve_quantized_lm.py --batch 8
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.synthetic import SyntheticTokens
+from repro.models.lm import HeteroQuantConfig
+from repro.serve.engine import make_cache, make_decode_fn, make_prefill_fn
+
+
+def build(arch_id, quantize):
+    arch = configs.get(arch_id)
+    arch = dataclasses.replace(arch, model=arch.smoke)
+    if quantize:
+        arch = dataclasses.replace(arch, model=dataclasses.replace(
+            arch.model,
+            hetero_quant=HeteroQuantConfig(w_bits_lut=6, a_bits=8,
+                                           ratio=0.5)))
+    return arch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    outs = {}
+    for quantize in (False, True):
+        arch = build(args.arch, quantize)
+        mod = arch.model_module()
+        params = mod.init(arch.model, jax.random.key(0))
+        data = SyntheticTokens(arch.model.vocab, args.batch,
+                               args.prompt_len, seed=0)
+        prompts = data.next_batch()["tokens"]
+        max_seq = args.prompt_len + args.new_tokens
+        cache = make_cache(arch, args.batch, max_seq, jnp.float32)
+        prefill = jax.jit(make_prefill_fn(arch))
+        decode = jax.jit(make_decode_fn(arch))
+
+        t0 = time.time()
+        logits, cache = prefill(params, {"tokens": prompts}, cache)
+        logits = jax.block_until_ready(logits)
+        t_pre = time.time() - t0
+
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks = [tok]
+        t0 = time.time()
+        for i in range(args.new_tokens - 1):
+            logits, cache = decode(params, tok, cache,
+                                   jnp.int32(args.prompt_len + i))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(tok)
+        jax.block_until_ready(tok)
+        t_dec = time.time() - t0
+
+        outs[quantize] = jnp.concatenate(toks, axis=1)
+        tag = "hybrid w6/a8" if quantize else "fp32        "
+        print(f"{tag}: prefill {t_pre * 1e3:7.1f} ms | decode "
+              f"{t_dec * 1e3 / max(args.new_tokens - 1, 1):6.1f} ms/tok | "
+              f"{args.batch * args.new_tokens / max(t_dec, 1e-9):6.0f} tok/s")
+
+    agree = float(jnp.mean(outs[False] == outs[True]))
+    print(f"quantized/fp greedy-token agreement: {agree:.2%} "
+          f"(same random init; 6-bit hybrid tracks fp closely)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerance substrate: async checkpointing + step watchdog."""
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.watchdog import StepWatchdog
+
+__all__ = ["CheckpointManager", "StepWatchdog"]

@@ -1,0 +1,12 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+from repro.configs.registry import (
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    get,
+    list_archs,
+    register,
+)
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "get", "list_archs",
+           "register"]

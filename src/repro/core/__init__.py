@@ -1,0 +1,48 @@
+"""The paper's primary contribution: heterogeneous-core GEMM co-design.
+
+Layers:
+  isa            — the unified 128-bit instruction set (§3.1)
+  scheduler      — instruction streams + event-driven pipeline sim (Fig. 3)
+  cost_model     — LUT/BRAM/DSP resource models (Eqs. 3-5)
+  latency_model  — closed-form + simulated latency (Eqs. 6-10)
+  split          — neuron-based workload split solver (Eqs. 11-12)
+  workloads      — im2col GEMM lowering of ResNet-18 / MobileNet-V2
+  tpu_cost       — the TPU hardware adaptation of the cost model
+  hetero_linear  — the TPU HeteroLinear module (split + hybrid quant GEMM)
+"""
+from repro.core.scheduler import (
+    DEVICES,
+    XC7Z020,
+    XC7Z045,
+    DspCoreConfig,
+    FPGADevice,
+    GemmDims,
+    LutCoreConfig,
+)
+from repro.core.cost_model import ResourceReport, system_cost
+from repro.core.latency_model import (
+    LayerLatency,
+    dsp_core_latency,
+    layer_latency,
+    lut_core_latency,
+    network_latency,
+)
+from repro.core.split import SplitResult, solve_network_splits, solve_split
+from repro.core.tpu_cost import (
+    V5E,
+    HeteroGemmCost,
+    RooflineTerms,
+    TPUChip,
+    hetero_gemm_cost,
+    roofline_terms,
+    solve_tpu_split,
+)
+
+__all__ = [
+    "DEVICES", "XC7Z020", "XC7Z045", "DspCoreConfig", "FPGADevice",
+    "GemmDims", "LutCoreConfig", "ResourceReport", "system_cost",
+    "LayerLatency", "dsp_core_latency", "layer_latency", "lut_core_latency",
+    "network_latency", "SplitResult", "solve_network_splits", "solve_split",
+    "V5E", "HeteroGemmCost", "RooflineTerms", "TPUChip", "hetero_gemm_cost",
+    "roofline_terms", "solve_tpu_split",
+]

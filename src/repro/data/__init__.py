@@ -1,0 +1,10 @@
+"""Deterministic synthetic data pipelines (no external datasets offline)."""
+from repro.data.synthetic import (
+    SyntheticImages,
+    SyntheticTokens,
+    make_batch_specs,
+    make_host_batch,
+)
+
+__all__ = ["SyntheticImages", "SyntheticTokens", "make_batch_specs",
+           "make_host_batch"]

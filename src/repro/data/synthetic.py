@@ -1,0 +1,126 @@
+"""Seeded synthetic batches for every model family.
+
+Offline container = no ImageNet / no web corpora, so training and
+serving examples run on deterministic synthetic data:
+
+  * ``SyntheticTokens`` — Zipf-distributed token streams with a
+    repeated-bigram structure (so a real LM loss signal exists: models
+    that learn the bigram table beat the unigram entropy floor).
+  * ``SyntheticImages`` — class-conditioned Gaussian blobs (linearly
+    separable at high SNR; quantization noise measurably hurts, which is
+    what the paper-reproduction accuracy proxies need).
+  * ``make_batch_specs`` — ShapeDtypeStruct stand-ins of the same batch
+    for the dry-run (arch x shape), including frontend-stub embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchConfig, ShapeSpec
+
+
+class SyntheticTokens:
+    """Deterministic LM batch stream: p(next | cur) is a fixed sparse
+    bigram table over a Zipf unigram prior."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 bigram_peak: float = 0.8):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        rng = np.random.default_rng(seed)
+        self._succ = rng.integers(0, vocab, size=vocab)   # bigram successor
+        self._peak = bigram_peak
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._unigram = p / p.sum()
+        self._rng = np.random.default_rng(seed + 1)
+
+    def next_batch(self) -> dict:
+        b, s = self.batch, self.seq
+        out = np.empty((b, s), np.int32)
+        cur = self._rng.choice(self.vocab, size=b, p=self._unigram)
+        out[:, 0] = cur
+        for t in range(1, s):
+            use_bigram = self._rng.random(b) < self._peak
+            nxt = np.where(use_bigram, self._succ[cur],
+                           self._rng.choice(self.vocab, size=b,
+                                            p=self._unigram))
+            out[:, t] = nxt
+            cur = nxt
+        return {"tokens": jnp.asarray(out)}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()
+
+
+class SyntheticImages:
+    """Class-conditioned Gaussian images for the CNN QAT experiments."""
+
+    def __init__(self, n_classes: int, batch: int, hw: int, seed: int = 0,
+                 snr: float = 3.0, sample_seed: int | None = None):
+        """``seed`` fixes the class prototypes (the task); ``sample_seed``
+        varies the noise/draws — train and test streams share ``seed``
+        but use different ``sample_seed`` values."""
+        self.n_classes, self.batch, self.hw = n_classes, batch, hw
+        rng = np.random.default_rng(seed)
+        self._proto = rng.standard_normal(
+            (n_classes, hw, hw, 3)).astype(np.float32)
+        self._snr = snr
+        self._rng = np.random.default_rng(
+            seed + 1 if sample_seed is None else sample_seed)
+
+    def next_batch(self) -> dict:
+        labels = self._rng.integers(0, self.n_classes, self.batch)
+        noise = self._rng.standard_normal(
+            (self.batch, self.hw, self.hw, 3)).astype(np.float32)
+        x = self._snr * self._proto[labels] + noise
+        return {"images": jnp.asarray(x),
+                "labels": jnp.asarray(labels.astype(np.int32))}
+
+    def __iter__(self):
+        while True:
+            yield self.next_batch()
+
+
+# ---------------------------------------------------------------------------
+# Dry-run batch specs (arch x shape -> abstract inputs)
+# ---------------------------------------------------------------------------
+
+VISION_PATCHES = 1024       # stub frontend: patches per sample (qwen2-vl)
+
+
+def make_batch_specs(arch: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct inputs for (arch, shape): the train/prefill batch
+    or the decode-step token. Frontend stubs included per the task spec."""
+    b, s = shape.global_batch, shape.seq_len
+    d = arch.model.d_model
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if arch.module == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, d), jnp.bfloat16)
+        elif arch.frontend == "vision":
+            specs["extra_embed"] = jax.ShapeDtypeStruct(
+                (b, s, d), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of length s
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def make_host_batch(arch: ArchConfig, batch: int, seq: int, seed: int = 0
+                    ) -> dict:
+    """Small concrete batch for smoke tests (reduced configs)."""
+    vocab = arch.smoke.vocab if arch.smoke is not None else arch.model.vocab
+    stream = SyntheticTokens(vocab, batch, seq, seed)
+    out = stream.next_batch()
+    d = (arch.smoke or arch.model).d_model
+    if arch.module == "encdec":
+        out["frames"] = 0.1 * jax.random.normal(
+            jax.random.key(seed), (batch, seq, d), jnp.float32)
+    elif arch.frontend == "vision":
+        out["extra_embed"] = 0.1 * jax.random.normal(
+            jax.random.key(seed), (batch, seq, d), jnp.float32)
+    return out

@@ -1,0 +1,14 @@
+"""Design-space exploration: the paper's DDPG-based co-design framework.
+
+  ddpg    — actor/critic/targets/replay/exploration noise, pure JAX
+  env     — the §5 environment: 6 hardware actions + 2N quantization
+            actions, Eq. 17 state, Eq. 13/14 discretization, Eq. 18 reward
+  search  — end-to-end search driver (paper Table 3 reproduction) with
+            both the FPGA cost model and the TPU-adapted cost model
+"""
+from repro.dse.ddpg import DDPGAgent, DDPGConfig
+from repro.dse.env import AccuracyProxy, N3HEnv, N3HEnvConfig
+from repro.dse.search import SearchResult, run_search
+
+__all__ = ["DDPGAgent", "DDPGConfig", "AccuracyProxy", "N3HEnv",
+           "N3HEnvConfig", "SearchResult", "run_search"]

@@ -1,0 +1,176 @@
+"""DDPG (Lillicrap et al.) in pure JAX — the paper's §5.4 search agent.
+
+Actor: state -> action in [0, 1] (sigmoid head — the paper discretizes
+continuous actions into the design-factor ranges, Eqs. 13-14).
+Critic: (state, action) -> Q. Target networks track with soft updates.
+Exploration: truncated Gaussian noise with exponential decay (the HAQ /
+AMC recipe the paper builds on).
+
+Everything jit-compiled; the replay buffer is host-side numpy (cheap,
+episode lengths are tens of steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    state_dim: int
+    action_dim: int = 1
+    hidden: tuple[int, ...] = (64, 64)
+    actor_lr: float = 1e-3
+    critic_lr: float = 1e-3
+    gamma: float = 0.99
+    tau: float = 0.01              # soft target update
+    buffer_size: int = 20000
+    batch_size: int = 64
+    noise_sigma: float = 0.5
+    noise_decay: float = 0.99
+    noise_min: float = 0.02
+
+
+def _mlp_init(rng, sizes):
+    params = []
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for k, (a, b) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+        params.append({"w": w, "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp_apply(params, x, final_sigmoid=False):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return jax.nn.sigmoid(x) if final_sigmoid else x
+
+
+class ReplayBuffer:
+    def __init__(self, size: int, state_dim: int, action_dim: int):
+        self.size = size
+        self.s = np.zeros((size, state_dim), np.float32)
+        self.a = np.zeros((size, action_dim), np.float32)
+        self.r = np.zeros((size,), np.float32)
+        self.s2 = np.zeros((size, state_dim), np.float32)
+        self.done = np.zeros((size,), np.float32)
+        self.n = 0
+        self.ptr = 0
+
+    def add(self, s, a, r, s2, done):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i] = s2, float(done)
+        self.ptr = (self.ptr + 1) % self.size
+        self.n = min(self.n + 1, self.size)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.n, batch)
+        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+                self.done[idx])
+
+
+class DDPGAgent:
+    def __init__(self, cfg: DDPGConfig, seed: int = 0):
+        self.cfg = cfg
+        rng = jax.random.key(seed)
+        ra, rc = jax.random.split(rng)
+        actor_sizes = (cfg.state_dim, *cfg.hidden, cfg.action_dim)
+        critic_sizes = (cfg.state_dim + cfg.action_dim, *cfg.hidden, 1)
+        self.actor = _mlp_init(ra, actor_sizes)
+        self.critic = _mlp_init(rc, critic_sizes)
+        self.actor_t = jax.tree.map(jnp.copy, self.actor)
+        self.critic_t = jax.tree.map(jnp.copy, self.critic)
+        self.buffer = ReplayBuffer(cfg.buffer_size, cfg.state_dim,
+                                   cfg.action_dim)
+        self.np_rng = np.random.default_rng(seed)
+        self.sigma = cfg.noise_sigma
+        self._step = self._build_update()
+
+    # -- acting ------------------------------------------------------------
+
+    def act(self, state: np.ndarray, explore: bool = True) -> np.ndarray:
+        a = np.asarray(_mlp_apply(self.actor, jnp.asarray(state)[None],
+                                  final_sigmoid=True))[0]
+        if explore:
+            a = a + self.np_rng.normal(0.0, self.sigma, a.shape)
+        return np.clip(a, 0.0, 1.0)
+
+    def decay_noise(self):
+        self.sigma = max(self.cfg.noise_min,
+                         self.sigma * self.cfg.noise_decay)
+
+    # -- learning ----------------------------------------------------------
+
+    def _build_update(self):
+        cfg = self.cfg
+
+        def critic_loss(critic, actor_t, critic_t, s, a, r, s2, done):
+            a2 = _mlp_apply(actor_t, s2, final_sigmoid=True)
+            q2 = _mlp_apply(critic_t, jnp.concatenate([s2, a2], -1))[:, 0]
+            target = r + cfg.gamma * (1.0 - done) * q2
+            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
+            return jnp.mean(jnp.square(q - jax.lax.stop_gradient(target)))
+
+        def actor_loss(actor, critic, s):
+            a = _mlp_apply(actor, s, final_sigmoid=True)
+            q = _mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
+            return -jnp.mean(q)
+
+        def adam(params, grads, m, v, t, lr):
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+            v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                             v, grads)
+            tf = t.astype(jnp.float32)
+            params = jax.tree.map(
+                lambda p, mm, vv: p - lr * (mm / (1 - b1 ** tf))
+                / (jnp.sqrt(vv / (1 - b2 ** tf)) + eps), params, m, v)
+            return params, m, v
+
+        @jax.jit
+        def step(actor, critic, actor_t, critic_t, opt, batch):
+            s, a, r, s2, done = batch
+            t = opt["t"] + 1
+            gc = jax.grad(critic_loss)(critic, actor_t, critic_t,
+                                       s, a, r, s2, done)
+            critic, mc, vc = adam(critic, gc, opt["mc"], opt["vc"], t,
+                                  cfg.critic_lr)
+            ga = jax.grad(actor_loss)(actor, critic, s)
+            actor, ma, va = adam(actor, ga, opt["ma"], opt["va"], t,
+                                 cfg.actor_lr)
+            soft = lambda tgt, p: jax.tree.map(
+                lambda tt, pp: (1 - cfg.tau) * tt + cfg.tau * pp, tgt, p)
+            opt = {"t": t, "ma": ma, "va": va, "mc": mc, "vc": vc}
+            return (actor, critic, soft(actor_t, actor),
+                    soft(critic_t, critic), opt)
+
+        return step
+
+    def _init_opt(self):
+        zeros = lambda tree: jax.tree.map(jnp.zeros_like, tree)
+        return {"t": jnp.zeros((), jnp.int32),
+                "ma": zeros(self.actor), "va": zeros(self.actor),
+                "mc": zeros(self.critic), "vc": zeros(self.critic)}
+
+    def remember(self, s, a, r, s2, done):
+        self.buffer.add(s, a, r, s2, done)
+
+    def learn(self, n_updates: int = 1):
+        if self.buffer.n < self.cfg.batch_size:
+            return
+        if not hasattr(self, "_opt"):
+            self._opt = self._init_opt()
+        for _ in range(n_updates):
+            batch = self.buffer.sample(self.np_rng, self.cfg.batch_size)
+            batch = tuple(jnp.asarray(x) for x in batch)
+            (self.actor, self.critic, self.actor_t, self.critic_t,
+             self._opt) = self._step(
+                self.actor, self.critic, self.actor_t, self.critic_t,
+                self._opt, batch)

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+  bitserial_gemm — bitplane GEMM (the LUT-core adaptation; latency ∝ bits)
+  int4_gemm      — packed-int4 GEMM (the DSP-core adaptation; fixed latency)
+  flash_attention — online-softmax attention for serving hot paths
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and is validated against
+it in interpret mode by the test suite. ``ops.py`` holds the public
+wrappers (padding, backend dispatch, GQA broadcast).
+"""
+from repro.kernels.ops import (
+    attention,
+    bitserial_matmul,
+    hetero_matmul,
+    int4_matmul,
+)
+from repro.kernels.ref import (
+    bitplane_decompose,
+    bitplane_reconstruct,
+    pack_int4,
+    plane_scales,
+    unpack_int4,
+)
+
+__all__ = [
+    "attention", "bitserial_matmul", "hetero_matmul", "int4_matmul",
+    "bitplane_decompose", "bitplane_reconstruct", "pack_int4",
+    "plane_scales", "unpack_int4",
+]

@@ -1,0 +1,124 @@
+"""Flash-attention Pallas kernel (forward) for serving hot paths.
+
+Online-softmax attention with KV streamed through VMEM in blocks:
+running row-max ``m``, normalizer ``l`` and the un-normalized output
+accumulator live in VMEM scratch across the KV sweep. This is the
+standard TPU flash schedule: grid (batch*heads, q-blocks, kv-blocks)
+with the kv dimension "arbitrary" (sequential, carries scratch).
+
+Causal masking is block-sparse: kv-blocks entirely above the diagonal
+are skipped arithmetically (masked to -inf) — Pallas on TPU still
+visits the block, so the win is numerical only in this kernel; the
+grid-pruned variant is a recorded §Perf follow-up.
+
+Used for prefill (Sq = Skv) and decode (Sq = 1 with a kv_offset); the
+pure-JAX blockwise fallback in ``repro.models.layers`` computes the
+same schedule with ``lax.scan`` for CPU/dry-run paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, kv_offset: int, bq: int,
+                  bkv: int, nkv: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bkv, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bkv, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qb = pl.program_id(1)
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+            + kv_offset
+        kpos = kb * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # [bq, bkv]
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nkv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, ...] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "kv_offset",
+                                             "bq", "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    kv_offset: int = 0, bq: int = DEFAULT_BQ,
+                    bkv: int = DEFAULT_BKV, interpret: bool = False
+                    ) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, H, Skv, D] -> [B, H, Sq, D].
+
+    H is the *query* head count; callers repeat/broadcast GQA KV heads
+    before the kernel (ops.py does this). Sq % bq == 0, Skv % bkv == 0.
+    """
+    b, h, sq, d = q.shape
+    _, _, skv, _ = k.shape
+    scale = float(scale if scale is not None else d ** -0.5)
+    if sq % bq or skv % bkv:
+        raise ValueError(f"seq ({sq},{skv}) not divisible by blocks "
+                         f"({bq},{bkv}); pad first")
+    bh = b * h
+    qf = q.reshape(bh, sq, d)
+    kf = k.reshape(bh, skv, d)
+    vf = v.reshape(bh, skv, d)
+    nq, nkv = sq // bq, skv // bkv
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          kv_offset=kv_offset, bq=bq, bkv=bkv, nkv=nkv),
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # normalizer
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,122 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities the raw kernels don't take:
+  * shape padding to block multiples (and un-padding the result);
+  * backend dispatch — on TPU the Pallas kernel runs compiled; on CPU
+    (tests, this container) the call automatically falls back to the
+    pure-jnp oracle, with ``interpret=True`` available to execute the
+    actual kernel body for validation;
+  * GQA head broadcasting for flash attention.
+
+These wrappers are the only entry points the model zoo uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitserial_gemm import bitserial_gemm as _bitserial_kernel
+from repro.kernels.int4_gemm import int4_gemm as _int4_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = x.shape[axis] % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+def bitserial_matmul(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                     bits: int, *, block: tuple[int, int, int] = (128, 128, 128),
+                     mode: str = "auto") -> jax.Array:
+    """Bitplane-path GEMM: int8 activations x ``bits``-bit weight codes.
+
+    x_q: [M, K] int8; w_q: [K, N] int32 codes; w_scale: [N] fp32.
+    mode: "auto" (kernel on TPU, oracle elsewhere), "kernel" (interpret
+    off-TPU), or "ref".
+    """
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.bitserial_gemm_ref(x_q, w_q, w_scale, bits)
+    bm, bk, bn = block
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    planes = ref.bitplane_decompose(w_q, bits)
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    pp = _pad_to(_pad_to(planes, 1, bk), 2, bn)
+    sp = _pad_to(w_scale, 0, bn)
+    out = _bitserial_kernel(xp, pp, sp, bits, bm=bm, bn=bn, bk=bk,
+                            interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def int4_matmul(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
+                block: tuple[int, int, int] = (128, 128, 128),
+                mode: str = "auto") -> jax.Array:
+    """Packed-int4-path GEMM: int8 activations x int4 weight codes.
+
+    x_q: [M, K] int8; w_q: [K, N] int32 codes in [-8, 7]; w_scale: [N].
+    """
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        n = w_q.shape[1]
+        packed = ref.pack_int4(_pad_to(w_q, 1, 2))
+        return ref.int4_gemm_ref(x_q, packed, _pad_to(w_scale, 0, 2))[:, :n]
+    bm, bk, bn = block
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    packed = ref.pack_int4(_pad_to(w_q, 1, 2))
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(packed, 0, bk), 1, bn // 2)
+    sp = _pad_to(_pad_to(w_scale, 0, 2), 0, bn)
+    out = _int4_kernel(xp, wp, sp, bm=bm, bn=bn, bk=bk,
+                       interpret=not _on_tpu())
+    return out[:m, :n]
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, kv_offset: int = 0,
+              block: tuple[int, int] = (128, 128),
+              mode: str = "auto") -> jax.Array:
+    """Flash attention with GQA broadcast.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    """
+    hq, hkv = q.shape[1], k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       kv_offset=kv_offset)
+    bq, bkv = block
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(bq, sq) if sq % bq else bq
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bkv)
+    vp = _pad_to(v, 2, bkv)
+    out = _flash_kernel(qp, kp, vp, causal=causal, kv_offset=kv_offset,
+                        bq=bq, bkv=bkv, interpret=not _on_tpu())
+    return out[:, :, :sq]
+
+
+def hetero_matmul(x_q: jax.Array, w_q_serial: jax.Array, s_serial: jax.Array,
+                  bits_serial: int, w_q_parallel: jax.Array,
+                  s_parallel: jax.Array, *, mode: str = "auto") -> jax.Array:
+    """The paper's split GEMM: serial-path columns then int4 columns."""
+    outs = []
+    if w_q_serial.shape[1]:
+        outs.append(bitserial_matmul(x_q, w_q_serial, s_serial, bits_serial,
+                                     mode=mode))
+    if w_q_parallel.shape[1]:
+        outs.append(int4_matmul(x_q, w_q_parallel, s_parallel, mode=mode))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)

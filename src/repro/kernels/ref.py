@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; the per-kernel
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle
+(kernels run in ``interpret=True`` mode on CPU).
+
+Also hosts the representation helpers shared by oracle and kernel:
+
+  * ``bitplane_decompose`` — paper Eq. (1): an ``bits``-bit signed
+    integer tensor becomes ``bits`` binary planes with per-plane signed
+    weights (two's complement: MSB plane weight is -2^(bits-1)).
+  * ``pack_int4`` / ``unpack_int4`` — two int4 codes per int8 byte
+    along the last axis (the DSP-core-analogue packed layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Representation helpers
+# ---------------------------------------------------------------------------
+
+
+def plane_scales(bits: int) -> jax.Array:
+    """Signed per-plane weights of a two's-complement decomposition."""
+    s = [2 ** b for b in range(bits - 1)] + [-(2 ** (bits - 1))]
+    return jnp.asarray(s, dtype=jnp.int32)
+
+
+def bitplane_decompose(q: jax.Array, bits: int) -> jax.Array:
+    """Signed integer codes -> ``[bits, ...]`` binary planes (int8 0/1).
+
+    Reconstruction: ``q == sum_b plane_scales(bits)[b] * planes[b]``.
+    """
+    u = jnp.asarray(q, jnp.int32) & ((1 << bits) - 1)  # two's complement bits
+    shifts = jnp.arange(bits, dtype=jnp.int32).reshape((bits,) + (1,) * q.ndim)
+    return ((u[None] >> shifts) & 1).astype(jnp.int8)
+
+
+def bitplane_reconstruct(planes: jax.Array) -> jax.Array:
+    bits = planes.shape[0]
+    s = plane_scales(bits).reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * s, axis=0)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack signed int4 codes pairwise along the last axis: [..., N] ->
+    [..., N//2] int8 with even index in the low nibble."""
+    if q.shape[-1] % 2 != 0:
+        raise ValueError("last axis must be even to pack int4 pairs")
+    lo = jnp.asarray(q[..., 0::2], jnp.int32) & 0xF
+    hi = jnp.asarray(q[..., 1::2], jnp.int32) & 0xF
+    return ((hi << 4) | lo).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of ``pack_int4`` (sign-extended)."""
+    b = jnp.asarray(p, jnp.int8)
+    lo = jnp.left_shift(b, 4) >> 4          # arithmetic shift sign-extends
+    hi = b >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Oracles
+# ---------------------------------------------------------------------------
+
+
+def bitserial_gemm_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
+                       bits: int) -> jax.Array:
+    """Bitplane GEMM oracle.
+
+    x: [M, K] int8 activations (already quantized, symmetric).
+    w_q: [K, N] signed integer weight codes within ``bits`` bits.
+    w_scale: [N] fp32 per-column dequantization scales.
+    Returns fp32 [M, N] = (x @ w_q) * w_scale, computed through the
+    bitplane decomposition so the oracle exercises the same numerics.
+    """
+    planes = bitplane_decompose(w_q, bits)                # [B, K, N]
+    s = plane_scales(bits)
+    acc = jnp.zeros((x.shape[0], w_q.shape[1]), jnp.int32)
+    for b in range(bits):
+        part = jax.lax.dot(x.astype(jnp.int8), planes[b],
+                           preferred_element_type=jnp.int32)
+        acc = acc + s[b] * part
+    return acc.astype(jnp.float32) * w_scale[None, :]
+
+
+def int4_gemm_ref(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array
+                  ) -> jax.Array:
+    """Packed-int4 GEMM oracle.
+
+    x: [M, K] int8; w_packed: [K, N//2] int8 (pack_int4 layout);
+    w_scale: [N] fp32. Returns fp32 [M, N].
+    """
+    w = unpack_int4(w_packed)                              # [K, N] int8
+    acc = jax.lax.dot(x.astype(jnp.int8), w,
+                      preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * w_scale[None, :]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, scale: float | None = None,
+                        kv_offset: int = 0) -> jax.Array:
+    """Plain softmax attention oracle.
+
+    q: [B, H, Sq, D]; k, v: [B, H, Skv, D]. ``kv_offset`` positions the
+    query block inside the KV sequence (decode: Sq=1, offset=Skv-1).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + kv_offset
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def hetero_gemm_ref(x: jax.Array, w_q_serial: jax.Array, s_serial: jax.Array,
+                    bits_serial: int, w_packed_parallel: jax.Array,
+                    s_parallel: jax.Array) -> jax.Array:
+    """The paper's heterogeneous split GEMM: first columns via the
+    bitplane path, remaining via the packed-int4 path, concatenated."""
+    lo = bitserial_gemm_ref(x, w_q_serial, s_serial, bits_serial)
+    hi = int4_gemm_ref(x, w_packed_parallel, s_parallel)
+    return jnp.concatenate([lo, hi], axis=-1)

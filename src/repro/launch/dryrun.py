@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices stand in for 2 pods x 256 chips;
+``jax.jit(step).lower(**abstract_inputs).compile()`` must succeed for
+every cell, and the compiled artifact yields
+
+  * ``memory_analysis()``  — bytes per device (proves it fits HBM),
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the roofline terms,
+  * the post-SPMD HLO text — collective operand bytes (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --multi-pod --out dryrun.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import registry
+from repro.data.synthetic import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as mlayers
+from repro.parallel.sharding import DEFAULT_RULES, AxisRules, logical_to_spec
+from repro.train.optimizer import OptState
+from repro.train.step import TrainState, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract (ShapeDtypeStruct) inputs with shardings attached
+# ---------------------------------------------------------------------------
+
+
+def resolve_rules(arch: registry.ArchConfig,
+                  shape: registry.ShapeSpec) -> AxisRules:
+    return DEFAULT_RULES.replace(**arch.rule_overrides,
+                                 **shape.rule_overrides)
+
+
+def _shard_struct(spec_tree: Any, mesh, rules: AxisRules) -> Any:
+    """ParamSpec tree -> ShapeDtypeStruct tree with NamedShardings."""
+    def one(s: mlayers.ParamSpec):
+        pspec = logical_to_spec(s.axes, mesh, rules, shape=s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, pspec))
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, mlayers.ParamSpec))
+
+
+def _shard_batch(batch_specs: dict, mesh, rules: AxisRules) -> dict:
+    out = {}
+    for k, s in batch_specs.items():
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        pspec = logical_to_spec(axes, mesh, rules, shape=s.shape)
+        out[k] = jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                      sharding=NamedSharding(mesh, pspec))
+    return out
+
+
+def abstract_train_state(arch: registry.ArchConfig, mesh, rules: AxisRules
+                         ) -> TrainState:
+    mod = arch.model_module()
+    pspecs = mod.param_specs(arch.model)
+    params = _shard_struct(pspecs, mesh, rules)
+    f32 = jax.tree.map(
+        lambda s: mlayers.ParamSpec(s.shape, s.axes, jnp.float32, s.init,
+                                    s.fan_in),
+        pspecs, is_leaf=lambda x: isinstance(x, mlayers.ParamSpec))
+    moments = _shard_struct(f32, mesh, rules)
+    scalar = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(
+            mesh, logical_to_spec((), mesh, rules)))
+    return TrainState(
+        params=params,
+        opt=OptState(m=moments,
+                     v=jax.tree.map(lambda x: x, moments),
+                     count=scalar),
+        step=scalar, compress=None)
+
+
+def abstract_cache(arch: registry.ArchConfig, shape: registry.ShapeSpec,
+                   mesh, rules: AxisRules) -> Any:
+    mod = arch.model_module()
+    b, s = shape.global_batch, shape.seq_len
+    if arch.module == "ssm":
+        cspecs = mod.cache_specs(arch.model, b)
+    elif arch.module == "encdec":
+        cspecs = mod.cache_specs(arch.model, b, max_tgt=s, src=s)
+    else:
+        cspecs = mod.cache_specs(arch.model, b, s)
+    return _shard_struct(cspecs, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Step builders per shape kind
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: registry.ArchConfig, shape: registry.ShapeSpec,
+               mesh, rules: AxisRules):
+    """Returns (fn, abstract_args) ready for jit(fn).lower(*args)."""
+    mod = arch.model_module()
+    cfg = arch.model
+
+    if shape.kind == "train":
+        step = make_train_step(arch, rules=rules)
+        state = abstract_train_state(arch, mesh, rules)
+        batch = _shard_batch(make_batch_specs(arch, shape), mesh, rules)
+        return step, (state, batch)
+
+    if shape.kind == "prefill":
+        batch = _shard_batch(make_batch_specs(arch, shape), mesh, rules)
+        if arch.module == "lm":
+            cache = abstract_cache(arch, shape, mesh, rules)
+
+            def prefill_step(params, batch, cache):
+                logits, cache = mod.prefill(
+                    params, batch["tokens"], cache, cfg, rules,
+                    extra_embed=batch.get("extra_embed"), last_only=True)
+                return logits, cache
+
+            mparams = _shard_struct(mod.param_specs(cfg), mesh, rules)
+            return prefill_step, (mparams, batch, cache)
+
+        def fwd_step(params, batch):
+            if arch.module == "encdec":
+                logits, _ = mod.forward(params, batch["frames"],
+                                        batch["tokens"], cfg, rules,
+                                        last_only=True)
+            else:
+                logits, _ = mod.forward(params, batch["tokens"], cfg, rules,
+                                        extra_embed=batch.get("extra_embed"),
+                                        last_only=True)
+            return logits
+
+        mparams = _shard_struct(mod.param_specs(cfg), mesh, rules)
+        return fwd_step, (mparams, batch)
+
+    # decode: one token against a cache of seq_len
+    batch = _shard_batch(make_batch_specs(arch, shape), mesh, rules)
+    cache = abstract_cache(arch, shape, mesh, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(
+        mesh, logical_to_spec((), mesh, rules)))
+
+    def serve_step(params, token, cache, pos):
+        return mod.decode_step(params, token, cache, pos, cfg, rules)
+
+    mparams = _shard_struct(mod.param_specs(cfg), mesh, rules)
+    return serve_step, (mparams, batch["token"], cache, pos)
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes HLO parser
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+    ``-done`` ops are skipped (the ``-start`` carries the shape)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, op, _ = m.group(1), m.group(2), m.group(3)
+        out[op] = out.get(op, 0) + _shape_bytes(sig)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+
+
+def _reduced_model(arch: registry.ArchConfig, n_scan: int = 2):
+    """Same config with the layer scan shortened to ``n_scan`` steps and
+    fully unrolled — the second point of the two-point cost fit."""
+    import dataclasses as _dc
+    m = arch.model
+    if arch.module == "hybrid":
+        small = _dc.replace(m, n_layers=n_scan * 8, scan_unroll=True)
+        real_trips, small_trips = m.n_periods, n_scan
+    elif arch.module == "encdec":
+        small = _dc.replace(m, n_enc_layers=n_scan, n_dec_layers=n_scan,
+                            scan_unroll=True)
+        # enc and dec scale together; use the (equal) layer counts
+        real_trips, small_trips = m.n_enc_layers, n_scan
+    else:
+        prefix = getattr(m, "n_dense_prefix", 0)
+        small = _dc.replace(m, n_layers=prefix + n_scan, scan_unroll=True)
+        real_trips = m.n_layers - prefix
+        small_trips = n_scan
+    return _dc.replace(arch, model=small), real_trips, small_trips
+
+
+def _compile_once(arch, shape, mesh, rules):
+    with mesh:
+        fn, args = build_step(arch, shape, mesh, rules)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll,
+        "mem": compiled.memory_analysis(),
+        "t_lower": t_lower,
+        "t_compile": t_compile,
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True, fit_costs: bool = True) -> dict:
+    """Lower+compile one (arch, shape, mesh) cell and derive its costs.
+
+    XLA HLO cost analysis visits a while-loop body ONCE regardless of
+    trip count, so a scanned L-layer model reports ~1/L of its FLOPs.
+    With ``fit_costs`` we therefore compile twice — the full scanned
+    program (F1 = C_body + C_outside, and the *real* memory picture)
+    and a 2-layer fully-unrolled variant (F2 = 2*C_body + C_outside) —
+    and report  total = F1 + (L_scan - 1) * (F2 - F1),  which is exact
+    for per-layer-homogeneous stacks. Collective bytes are fitted the
+    same way (the while body's collectives also appear once).
+    """
+    arch = registry.get(arch_id)
+    shape = registry.SHAPES[shape_name]
+    if shape_name in arch.skip_shapes:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch skips long_500k"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = resolve_rules(arch, shape)
+    n_chips = mesh.devices.size
+
+    if shape.kind == "decode":
+        # decode graphs are small: compile fully unrolled — exact costs,
+        # no extrapolation (the two-point fit amplifies XLA noise when
+        # per-layer FLOPs are tiny).
+        import dataclasses as _dc
+        arch = _dc.replace(arch, model=_dc.replace(arch.model,
+                                                   scan_unroll=True))
+        fit_costs = False
+
+    full = _compile_once(arch, shape, mesh, rules)
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(full["t_lower"], 1),
+        "compile_s": round(full["t_compile"], 1),
+        "flops_per_device_scanned": full["flops"],
+        "bytes_per_device_scanned": full["bytes"],
+    }
+
+    if fit_costs:
+        small_arch, trips, small_trips = _reduced_model(arch)
+        small = _compile_once(small_arch, shape, mesh, rules)
+        scale = (trips - small_trips + 1)  # F1 + (L-1)(F2-F1) when small=2
+        d_flops = small["flops"] - full["flops"]
+        d_bytes = small["bytes"] - full["bytes"]
+        rec["flops_per_device"] = full["flops"] + (trips - 1) * d_flops
+        rec["bytes_per_device"] = full["bytes"] + (trips - 1) * d_bytes
+        coll = {}
+        keys = set(full["coll"]) | set(small["coll"])
+        for k in keys:
+            f1 = full["coll"].get(k, 0)
+            f2 = small["coll"].get(k, 0)
+            coll[k] = int(max(0, f1 + (trips - 1) * (f2 - f1)))
+        rec["collective_bytes_per_device"] = coll
+        rec["collective_bytes_total"] = int(sum(coll.values()))
+        del scale
+    else:
+        rec["flops_per_device"] = full["flops"]
+        rec["bytes_per_device"] = full["bytes"]
+        rec["collective_bytes_per_device"] = {
+            k: int(v) for k, v in full["coll"].items()}
+        rec["collective_bytes_total"] = int(sum(full["coll"].values()))
+
+    mem = full["mem"]
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[f"mem_{k}"] = int(v)
+    if verbose:
+        print(json.dumps(rec))
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = registry.list_archs() if args.arch == "all" else [args.arch]
+    shapes = (list(registry.SHAPES) if args.shape == "all"
+              else [args.shape])
+
+    records = []
+    failures = 0
+    for a in archs:
+        for s in shapes:
+            try:
+                records.append(run_cell(a, s, multi_pod=args.multi_pod))
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures += 1
+                traceback.print_exc()
+                records.append({"arch": a, "shape": s, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    ok = sum(1 for r in records if r["status"] == "ok")
+    sk = sum(1 for r in records if r["status"] == "skipped")
+    print(f"# dry-run: {ok} ok, {sk} skipped, {failures} failed "
+          f"(mesh={'2x16x16' if args.multi_pod else '16x16'})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

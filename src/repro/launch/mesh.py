@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips; the
+"pod" axis is pure data parallelism across the slow (DCN) links in the
+baseline; gradient compression (parallel/compress.py) targets exactly
+that axis.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state — only the dry-run (which sets
+xla_force_host_platform_device_count=512 before any jax import) and the
+real launchers call it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

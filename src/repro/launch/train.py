@@ -1,0 +1,99 @@
+"""Training launcher: data -> train_step -> checkpoints, fault-tolerant.
+
+The full production path (auto-resume, async checkpoints, straggler
+watchdog, gradient compression) on whatever devices exist — the same
+code drives a smoke config on this CPU container and the production
+mesh on a real pod (the dry-run proves the latter compiles).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, StepWatchdog
+from repro.configs import registry
+from repro.data.synthetic import SyntheticTokens
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.parallel.sharding import DEFAULT_RULES
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="(16,16) mesh — requires 256 devices")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = registry.get(args.arch)
+    if args.smoke:
+        arch = dataclasses.replace(arch, model=arch.smoke)
+    mod = arch.model_module()
+    rules = DEFAULT_RULES.replace(**arch.rule_overrides)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps)
+    train_step = jax.jit(make_train_step(arch, opt_cfg, rules,
+                                         compress_grads=args.compress_grads))
+
+    data = SyntheticTokens(arch.model.vocab, args.batch, args.seq,
+                           seed=args.seed)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    dog = StepWatchdog(
+        heartbeat_path=(f"{args.ckpt_dir}/heartbeat.json"
+                        if args.ckpt_dir else None))
+
+    with mesh:
+        params = mod.init(arch.model, jax.random.key(args.seed))
+        state = init_train_state(params, compress_grads=args.compress_grads)
+        start = 0
+        if mgr is not None and mgr.latest_step() is not None:
+            start = mgr.latest_step()
+            state = mgr.restore(state, step=start)
+            print(f"# resumed from checkpoint step {start}")
+
+        t0 = time.time()
+        for step in range(start, args.steps):
+            dog.start_step(step)
+            batch = data.next_batch()
+            state, metrics = train_step(state, batch)
+            if dog.end_step():
+                print(f"# straggler flagged at step {step} "
+                      f"({dog.times[-1]:.2f}s vs median "
+                      f"{dog.median_step_s():.2f}s)")
+            if (step + 1) % args.log_every == 0:
+                print(f"step {step + 1:5d}  loss {float(metrics['loss']):.4f}"
+                      f"  |g| {float(metrics['grad_norm']):.3f}"
+                      f"  lr {float(metrics['lr']):.2e}")
+            if mgr is not None and (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, state)
+        if mgr is not None:
+            mgr.save(args.steps, state, blocking=True)
+        dt = time.time() - t0
+        n = args.steps - start
+        print(f"# {n} steps in {dt:.1f}s "
+              f"({n * args.batch * args.seq / max(dt, 1e-9):.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: every assigned architecture family, in pure JAX.
+
+  layers       — shared blocks: norms, RoPE/M-RoPE, blockwise attention,
+                 GQA/MLA, gated MLPs, GShard-style MoE, ParamSpec machinery
+  lm           — decoder-only LM (dense / MoE / MLA / VLM) with scan-over-
+                 layers, train/prefill/decode entry points
+  ssm          — Mamba2 SSD (chunked state-space duality)
+  hybrid       — Jamba (Mamba+attention 1:7 interleave + MoE)
+  encdec       — Seamless-M4T backbone (encoder-decoder, audio frontend stub)
+  cnn          — ResNet-18 / MobileNet-V2 (the paper's own workloads) with
+                 the hybrid filter-wise quantization of §4
+"""

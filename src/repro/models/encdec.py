@@ -1,0 +1,343 @@
+"""Seamless-M4T-v2 backbone: encoder-decoder transformer.
+
+Per the task spec the modality frontend is a STUB — ``input_specs``
+provides precomputed speech *frame embeddings* [B, S_src, d_model]
+(what the real model's conformer feature extractor would emit); the
+text decoder is a standard causal transformer with cross-attention.
+
+Encoder: bidirectional self-attention + MLP, scanned.
+Decoder: causal self-attention + cross-attention + MLP, scanned.
+Decode caches per layer: self KV (grows) + cross KV (computed once from
+the encoder memory at prefill, static afterwards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, with_logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    vocab_pad_multiple: int = 256
+    rope_theta: float = 10000.0
+    act: str = "relu"                    # seamless uses ReLU FFNs
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: str = "none"
+    scan_unroll: bool = False
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: EncDecConfig, cross: bool = False) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, hq * hd), ("embed", "heads"), dt),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wo": ParamSpec((hq * hd, d), ("heads", "embed"), dt),
+    }
+
+
+def _enc_layer_specs(cfg: EncDecConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "ln_attn": L.rmsnorm_spec(cfg.d_model, dt),
+        "attn": _attn_specs(cfg),
+        "ln_mlp": L.rmsnorm_spec(cfg.d_model, dt),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _dec_layer_specs(cfg: EncDecConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "ln_self": L.rmsnorm_spec(cfg.d_model, dt),
+        "self_attn": _attn_specs(cfg),
+        "ln_cross": L.rmsnorm_spec(cfg.d_model, dt),
+        "cross_attn": _attn_specs(cfg, cross=True),
+        "ln_mlp": L.rmsnorm_spec(cfg.d_model, dt),
+        "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def param_specs(cfg: EncDecConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), dt, "embed"),
+        "enc_layers": L.stack_specs(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "ln_enc": L.rmsnorm_spec(cfg.d_model, dt),
+        "dec_layers": L.stack_specs(_dec_layer_specs(cfg), cfg.n_dec_layers),
+        "ln_dec": L.rmsnorm_spec(cfg.d_model, dt),
+        "unembed": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                             ("embed", "vocab"), dt),
+    }
+
+
+def init(cfg: EncDecConfig, rng: jax.Array) -> dict:
+    return L.init_params(param_specs(cfg), rng)
+
+
+def abstract(cfg: EncDecConfig) -> dict:
+    return L.abstract_params(param_specs(cfg))
+
+
+def param_axes(cfg: EncDecConfig) -> dict:
+    return L.param_axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: EncDecConfig) -> int:
+    return L.param_count(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Attention helpers
+# ---------------------------------------------------------------------------
+
+
+def _self_attention(p: dict, x: jax.Array, positions: jax.Array,
+                    cfg: EncDecConfig, rules: AxisRules, causal: bool,
+                    cache: dict | None = None, cache_len=None
+                    ) -> tuple[jax.Array, dict | None]:
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = with_logical_constraint(
+        q, ("batch", "act_seq_attn", "act_heads", None), rules=rules)
+    if cache is None:
+        out = L.blockwise_attention(q, k, v, causal=causal,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk)
+        new_cache = None
+    else:
+        idx = jnp.asarray(cache_len, jnp.int32)
+        k_cache = L.cache_write(cache["k"], k, idx)
+        v_cache = L.cache_write(cache["v"], v, idx)
+        out = L.decode_attention(q, k_cache, v_cache, kv_len=idx + s)
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = out.reshape(b, s, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+def _cross_attention(p: dict, x: jax.Array, memory: jax.Array | None,
+                     cfg: EncDecConfig, rules: AxisRules,
+                     kv_cache: dict | None = None) -> jax.Array:
+    """memory: [B, S_src, M] (train/prefill) or kv_cache holds
+    precomputed cross K/V (decode)."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    q = with_logical_constraint(
+        q, ("batch", "act_seq_attn", "act_heads", None), rules=rules)
+    if kv_cache is not None:
+        k, v = kv_cache["k"], kv_cache["v"]
+    else:
+        src = memory.shape[1]
+        k = (memory @ p["wk"]).reshape(b, src, hkv, hd)
+        v = (memory @ p["wv"]).reshape(b, src, hkv, hd)
+    out = L.blockwise_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = out.reshape(b, s, hq * hd)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder stacks
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, frames: jax.Array, cfg: EncDecConfig,
+           rules: AxisRules = DEFAULT_RULES) -> jax.Array:
+    """frames: [B, S_src, d_model] precomputed frame embeddings (stub
+    frontend). Returns encoder memory [B, S_src, d_model]."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = frames.astype(cfg.param_dtype)
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+
+    def body(x, p):
+        def inner(x):
+            h, _ = _self_attention(p["attn"],
+                                   L.rmsnorm(x, p["ln_attn"], cfg.norm_eps),
+                                   positions, cfg, rules, causal=False)
+            x = x + h
+            x = x + L.mlp_apply(p["mlp"],
+                                L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps),
+                                cfg.act, rules)
+            return with_logical_constraint(x, ("batch", "act_res", None),
+                                           rules=rules)
+        fn = inner
+        if cfg.remat == "full":
+            fn = jax.checkpoint(inner,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.scan_unroll)
+    return L.rmsnorm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder_stack(params: dict, x: jax.Array, positions: jax.Array,
+                   memory: jax.Array, cfg: EncDecConfig, rules: AxisRules
+                   ) -> jax.Array:
+    def body(x, p):
+        def inner(x):
+            h, _ = _self_attention(p["self_attn"],
+                                   L.rmsnorm(x, p["ln_self"], cfg.norm_eps),
+                                   positions, cfg, rules, causal=True)
+            x = x + h
+            x = x + _cross_attention(p["cross_attn"],
+                                     L.rmsnorm(x, p["ln_cross"],
+                                               cfg.norm_eps),
+                                     memory, cfg, rules)
+            x = x + L.mlp_apply(p["mlp"],
+                                L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps),
+                                cfg.act, rules)
+            return with_logical_constraint(x, ("batch", "act_res", None),
+                                           rules=rules)
+        fn = inner
+        if cfg.remat == "full":
+            fn = jax.checkpoint(inner,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(x), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"],
+                        unroll=cfg.scan_unroll)
+    return x
+
+
+def forward(params: dict, frames: jax.Array, tokens: jax.Array,
+            cfg: EncDecConfig, rules: AxisRules = DEFAULT_RULES,
+            last_only: bool = False,
+            slice_vocab: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced training forward. Returns (logits, aux=0)."""
+    memory = encode(params, frames, cfg, rules)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    x = _decoder_stack(params, x, positions, memory, cfg, rules)
+    x = L.rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    logits = with_logical_constraint(logits, ("batch", None, "vocab_act"),
+                                     rules=rules)
+    if not slice_vocab:
+        return logits, jnp.float32(0.0)
+    return logits[..., :cfg.vocab], jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: EncDecConfig, batch: int, max_tgt: int, src: int,
+                dtype=jnp.bfloat16) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    layer = {
+        "self": {
+            "k": ParamSpec((batch, max_tgt, hkv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+            "v": ParamSpec((batch, max_tgt, hkv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+        },
+        "cross": {
+            "k": ParamSpec((batch, src, hkv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+            "v": ParamSpec((batch, src, hkv, hd),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+        },
+    }
+    return {"layers": L.stack_specs(layer, cfg.n_dec_layers)}
+
+
+def init_cache(cfg: EncDecConfig, batch: int, max_tgt: int, src: int,
+               dtype=jnp.bfloat16) -> dict:
+    return L.init_params(cache_specs(cfg, batch, max_tgt, src, dtype),
+                         jax.random.key(0))
+
+
+def build_cross_cache(params: dict, memory: jax.Array, cfg: EncDecConfig,
+                      cache: dict, dtype=jnp.bfloat16) -> dict:
+    """Fill the static cross-attention K/V from encoder memory."""
+    b, src, _ = memory.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def per_layer(p_layer):
+        k = (memory @ p_layer["cross_attn"]["wk"]).reshape(b, src, hkv, hd)
+        v = (memory @ p_layer["cross_attn"]["wv"]).reshape(b, src, hkv, hd)
+        return k.astype(dtype), v.astype(dtype)
+
+    ks, vs = jax.lax.map(per_layer, params["dec_layers"])
+    new_cache = dict(cache)
+    new_cache["layers"] = dict(cache["layers"])
+    new_cache["layers"]["cross"] = {"k": ks, "v": vs}
+    return new_cache
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict, cache_len,
+                cfg: EncDecConfig, rules: AxisRules = DEFAULT_RULES
+                ) -> tuple[jax.Array, dict]:
+    """One decoder token; cross K/V must already be in the cache."""
+    b = token.shape[0]
+    idx = jnp.asarray(cache_len, jnp.int32)
+    positions = jnp.broadcast_to(idx.reshape(-1, 1), (b, 1)).astype(jnp.int32)
+    x = params["embed"][token]
+
+    def body(x, xs):
+        p, c = xs
+        h, self_new = _self_attention(
+            p["self_attn"], L.rmsnorm(x, p["ln_self"], cfg.norm_eps),
+            positions, cfg, rules, causal=True, cache=c["self"],
+            cache_len=idx)
+        x = x + h
+        x = x + _cross_attention(p["cross_attn"],
+                                 L.rmsnorm(x, p["ln_cross"], cfg.norm_eps),
+                                 None, cfg, rules, kv_cache=c["cross"])
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps),
+                            cfg.act, rules)
+        return x, {"self": self_new, "cross": c["cross"]}
+
+    x, cache_layers = jax.lax.scan(body, x, (params["dec_layers"],
+                                             cache["layers"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["ln_dec"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    return logits[..., :cfg.vocab], {"layers": cache_layers}

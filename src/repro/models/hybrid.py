@@ -1,0 +1,300 @@
+"""Jamba-style hybrid LM: Mamba + attention interleaved 1:7, with MoE.
+
+Structure (period of 8 layers, Jamba's attention-to-Mamba ratio):
+
+    [mamba, mamba, mamba, ATTN, mamba, mamba, mamba, mamba]
+
+Every layer is followed by an FFN; MoE replaces the dense MLP on every
+second layer (odd in-period indices). The model scans over *periods*
+(each period's parameters stacked on the leading axis) and unrolls the
+8 heterogeneous sub-layers inside the scan body — HLO size stays
+bounded by one period regardless of depth.
+
+Decode carries a hybrid cache per period: 7 recurrent SSD states + 1 KV
+cache — the attention KV cache is the only O(S) memory, which is what
+makes the 500k-token decode shape feasible (4 attention layers for the
+32-layer config).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import lm as lm_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, with_logical_constraint
+
+
+PERIOD = 8
+ATTN_POS = 3          # in-period index of the attention layer
+MOE_POS = (1, 3, 5, 7)  # in-period indices with MoE FFN (every 2nd layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int                      # must be a multiple of PERIOD
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    ssm: ssm_mod.SSMConfig
+    moe: L.MoEConfig
+    vocab_pad_multiple: int = 256
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: str = "none"
+    scan_unroll: bool = False
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    @property
+    def n_periods(self) -> int:
+        if self.n_layers % PERIOD:
+            raise ValueError(f"n_layers {self.n_layers} % {PERIOD} != 0")
+        return self.n_layers // PERIOD
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    def as_lm(self) -> lm_mod.LMConfig:
+        """Attention sub-layer view (reuses lm.py attention)."""
+        return lm_mod.LMConfig(
+            name=self.name, n_layers=1, d_model=self.d_model,
+            n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim, d_ff=self.d_ff, vocab=self.vocab,
+            rope_theta=self.rope_theta, act=self.act,
+            param_dtype=self.param_dtype, norm_eps=self.norm_eps,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Param specs (one period, stacked over periods)
+# ---------------------------------------------------------------------------
+
+
+def _period_specs(cfg: HybridConfig) -> dict:
+    dt = cfg.param_dtype
+    n_mamba = PERIOD - 1
+    n_moe = len(MOE_POS)
+    n_mlp = PERIOD - n_moe
+    specs = {
+        "mamba": L.stack_specs(
+            {"ln": L.rmsnorm_spec(cfg.d_model, dt),
+             "ssm": ssm_mod.block_specs(cfg.ssm, dt)}, n_mamba,
+            axis_name="sublayers"),
+        "attn": {"ln": L.rmsnorm_spec(cfg.d_model, dt),
+                 "attn": lm_mod._attn_specs(cfg.as_lm())},
+        "moe": L.stack_specs(
+            {"ln": L.rmsnorm_spec(cfg.d_model, dt),
+             "ffn": L.moe_specs(cfg.d_model, cfg.moe, dt)}, n_moe,
+            axis_name="sublayers"),
+        "mlp": L.stack_specs(
+            {"ln": L.rmsnorm_spec(cfg.d_model, dt),
+             "ffn": L.mlp_specs(cfg.d_model, cfg.d_ff, dt)}, n_mlp,
+            axis_name="sublayers"),
+    }
+    return specs
+
+
+def param_specs(cfg: HybridConfig) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), dt, "embed"),
+        "periods": L.stack_specs(_period_specs(cfg), cfg.n_periods,
+                                 axis_name="layers"),
+        "ln_f": L.rmsnorm_spec(cfg.d_model, dt),
+        "unembed": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                             ("embed", "vocab"), dt),
+    }
+
+
+def init(cfg: HybridConfig, rng: jax.Array) -> dict:
+    return L.init_params(param_specs(cfg), rng)
+
+
+def abstract(cfg: HybridConfig) -> dict:
+    return L.abstract_params(param_specs(cfg))
+
+
+def param_axes(cfg: HybridConfig) -> dict:
+    return L.param_axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: HybridConfig) -> int:
+    return L.param_count(param_specs(cfg))
+
+
+def active_param_count(cfg: HybridConfig) -> int:
+    total = param_count(cfg)
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_params = 3 * cfg.d_model * cfg.moe.d_ff
+    total -= cfg.n_periods * len(MOE_POS) * (e - k) * expert_params
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Period body
+# ---------------------------------------------------------------------------
+
+
+def _take(tree: Any, i: int) -> Any:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _period_apply(p: dict, x: jax.Array, positions: jax.Array,
+                  cfg: HybridConfig, rules: AxisRules,
+                  cache: dict | None = None, cache_len=None
+                  ) -> tuple[jax.Array, jax.Array, dict | None]:
+    lm_cfg = cfg.as_lm()
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {"mamba": [], "attn": None} \
+        if cache is not None else None
+    i_mamba = i_moe = i_mlp = 0
+    for pos in range(PERIOD):
+        # ---- token mixer
+        if pos == ATTN_POS:
+            pa = p["attn"]
+            h, kv_new = lm_mod._attention(
+                pa["attn"], L.rmsnorm(x, pa["ln"], cfg.norm_eps), positions,
+                lm_cfg, rules,
+                cache=None if cache is None else cache["attn"],
+                cache_len=cache_len)
+            if cache is not None:
+                new_cache["attn"] = kv_new
+        else:
+            pm = _take(p["mamba"], i_mamba)
+            h, ssm_new = ssm_mod.block_apply(
+                pm["ssm"], L.rmsnorm(x, pm["ln"], cfg.norm_eps), cfg.ssm,
+                rules, cache=None if cache is None
+                else _take(cache["mamba"], i_mamba))
+            if cache is not None:
+                new_cache["mamba"].append(ssm_new)
+            i_mamba += 1
+        x = x + h
+        x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+        # ---- FFN
+        if pos in MOE_POS:
+            pf = _take(p["moe"], i_moe)
+            h, aux_i = L.moe_apply(pf["ffn"],
+                                   L.rmsnorm(x, pf["ln"], cfg.norm_eps),
+                                   cfg.moe, cfg.act, rules)
+            aux = aux + aux_i
+            i_moe += 1
+        else:
+            pf = _take(p["mlp"], i_mlp)
+            h = L.mlp_apply(pf["ffn"], L.rmsnorm(x, pf["ln"], cfg.norm_eps),
+                            cfg.act, rules)
+            i_mlp += 1
+        x = x + h
+        x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+    if new_cache is not None:
+        new_cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_cache["mamba"])
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(params: dict, tokens: jax.Array, cfg: HybridConfig,
+            rules: AxisRules = DEFAULT_RULES,
+            positions: jax.Array | None = None,
+            extra_embed: jax.Array | None = None,
+            last_only: bool = False,
+            slice_vocab: bool = True) -> tuple[jax.Array, jax.Array]:
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+
+    def body(carry, p_period):
+        x, aux = carry
+        def inner(x):
+            return _period_apply(p_period, x, positions, cfg, rules)[:2]
+        fn = inner
+        if cfg.remat == "full":
+            fn = jax.checkpoint(inner,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        y, aux_i = fn(x)
+        return (y, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               params["periods"], unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    logits = with_logical_constraint(logits, ("batch", None, "vocab_act"),
+                                     rules=rules)
+    if not slice_vocab:
+        return logits, aux
+    return logits[..., :cfg.vocab], aux
+
+
+def cache_specs(cfg: HybridConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> dict:
+    period = {
+        "mamba": L.stack_specs(
+            ssm_mod.block_cache_specs(cfg.ssm, batch, dtype), PERIOD - 1,
+            axis_name="sublayers"),
+        "attn": {
+            "k": ParamSpec((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+            "v": ParamSpec((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           dtype, "zeros"),
+        },
+    }
+    return {"periods": L.stack_specs(period, cfg.n_periods,
+                                     axis_name="layers")}
+
+
+def init_cache(cfg: HybridConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    return L.init_params(cache_specs(cfg, batch, max_seq, dtype),
+                         jax.random.key(0))
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict,
+                cache_len, cfg: HybridConfig,
+                rules: AxisRules = DEFAULT_RULES,
+                extra_embed: jax.Array | None = None
+                ) -> tuple[jax.Array, dict]:
+    b = token.shape[0]
+    idx = jnp.asarray(cache_len, jnp.int32)
+    positions = jnp.broadcast_to(idx.reshape(-1, 1), (b, 1)).astype(jnp.int32)
+    x = params["embed"][token]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+
+    def body(x, xs):
+        p_period, c_period = xs
+        y, _, c_new = _period_apply(p_period, x, positions, cfg, rules,
+                                    cache=c_period, cache_len=idx)
+        return y, c_new
+
+    x, cache_periods = jax.lax.scan(body, x, (params["periods"],
+                                              cache["periods"]),
+                                    unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    return logits[..., :cfg.vocab], {"periods": cache_periods}

@@ -1,0 +1,514 @@
+"""Shared model building blocks with logical-axis sharding annotations.
+
+Parameter trees are declared as ``ParamSpec`` pytrees (shape + logical
+axes + init law); generic helpers materialize them (``init_params``),
+build abstract stand-ins for the dry-run (``abstract_params``), or
+extract the logical-axes tree for the sharding rules
+(``param_axes_tree``). Layer-stacked parameters carry a leading
+"layers" axis and are consumed by ``jax.lax.scan``.
+
+Activation sharding is expressed with ``with_logical_constraint`` using
+these activation axis names (per-arch rule overrides rebind them):
+
+  batch          -> ("pod", "data")      always
+  act_heads      -> ("model",)           attention heads (divisible archs)
+  act_kv_heads   -> ("model",)           KV heads (falls back if < mesh)
+  act_seq_attn   -> ()                   q-sequence inside attention; bound
+                                         to ("model",) for archs whose head
+                                         count does not divide the mesh
+                                         (sequence/context parallelism)
+  act_mlp        -> ("model",)           MLP hidden
+  kv_seq         -> ()                   KV-cache sequence; bound to
+                                         ("data","model") for long-context
+  expert_group   -> ("data",)            MoE dispatch groups
+  act_experts    -> ("model",)           MoE expert dim of dispatched acts
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, with_logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter leaf."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed
+    fan_in: int | None = None     # for "normal": std = 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank "
+                             "mismatch")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree: Any, rng: jax.Array) -> Any:
+    """Materialize a ParamSpec tree into arrays."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, max(len(leaves), 1))
+
+    def make(spec: ParamSpec, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, spec.dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        if spec.init == "embed":
+            return (jax.random.normal(key, spec.shape, jnp.float32)
+                    .astype(spec.dtype))
+        fan = spec.fan_in or (spec.shape[-2] if len(spec.shape) >= 2
+                              else spec.shape[-1])
+        std = 1.0 / math.sqrt(max(fan, 1))
+        return (std * jax.random.normal(key, spec.shape, jnp.float32)
+                ).astype(spec.dtype)
+
+    return jax.tree.unflatten(
+        treedef, [make(s, k) for s, k in zip(leaves, rngs)])
+
+
+def abstract_params(spec_tree: Any) -> Any:
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        spec_tree, is_leaf=_is_spec)
+
+
+def param_axes_tree(spec_tree: Any) -> Any:
+    """Logical-axes tree congruent with the params (for sharding rules)."""
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def param_count(spec_tree: Any) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(spec_tree, is_leaf=_is_spec))
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prefix every leaf with a stacked layer dimension (for lax.scan)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            s.dtype, s.init, s.fan_in),
+        spec_tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int, dtype=jnp.bfloat16) -> ParamSpec:
+    return ParamSpec((dim,), (None,), dtype, "ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # [head_dim//2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the frequency bands of each head are
+    split into ``sections`` (t, h, w) groups, each rotated by its own
+    position component. positions: [3, B, S]. With all three components
+    equal (text-only) this reduces exactly to standard RoPE.
+    """
+    d = x.shape[-1]
+    if sum(sections) != d // 2:
+        raise ValueError(f"sections {sections} must sum to head_dim/2={d // 2}")
+    freqs = rope_frequencies(d, theta)                     # [d/2]
+    # Select, per frequency band, which position component drives it.
+    comp = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    picked = jnp.moveaxis(positions.astype(jnp.float32), 0, -1)  # [B, S, 3]
+    ang = picked[..., comp] * freqs                        # [B, S, d/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (blockwise online-softmax; pure JAX, compiles everywhere)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_chunk: int = 512,
+                        kv_chunk: int = 1024, kv_offset: int = 0,
+                        softmax_scale: float | None = None) -> jax.Array:
+    """Memory-efficient attention: online softmax over KV chunks.
+
+    q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D], Hq % Hkv == 0. Never
+    materializes more than [B, Hq, q_chunk, kv_chunk] of scores — the
+    pure-JAX flash schedule (same math as kernels/flash_attention.py).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]                     # may differ from d (MLA)
+    rep = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # Pad seq dims to chunk multiples (masked out below).
+    pq = (-sq) % q_chunk
+    pk = (-skv) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (sq + pq) // q_chunk, (skv + pk) // kv_chunk
+
+    # NOTES: the query head axis stays whole (never grouped into
+    # [hkv, rep]) so GSPMD head sharding survives; KV heads are repeated
+    # *per chunk* inside the scan — a [B, kv_chunk, Hq, D] transient.
+    # Tensors stay in the model dtype (bf16) end to end — casting q/k/v
+    # to fp32 up front doubled every attention reshard (measured on the
+    # collective-bound dry-run cells); fp32 lives only in the softmax
+    # statistics and the accumulator via preferred_element_type.
+    qc = q.reshape(b, nq, q_chunk, hq, d)
+    kc = k.reshape(b, nk, kv_chunk, hkv, d)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dv)
+
+    q_pos_base = jnp.arange(nq) * q_chunk
+    k_pos_base = jnp.arange(nk) * kv_chunk
+
+    def per_q_chunk(args):
+        qi, qbase = args                                  # [B, qc, Hq, D]
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, vj, kbase = kv
+            if rep > 1:
+                kj = jnp.repeat(kj, rep, axis=2)          # [B, kc, Hq, D]
+                vj = jnp.repeat(vj, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qbase + jnp.arange(q_chunk) + kv_offset
+            kpos = kbase + jnp.arange(kv_chunk)
+            mask = kpos[None, :] < skv                     # padding mask
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), k_pos_base))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhqd->bqhd", out)               # [B, qc, Hq, D]
+
+    outs = jax.lax.map(per_q_chunk, (jnp.moveaxis(qc, 1, 0), q_pos_base))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, hq, dv)
+    return out[:, :sq].astype(v.dtype)
+
+
+def quantize_kv(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """[B, S, H, D] -> int8 with per-(batch, head) ``scale`` [B, H]."""
+    s = scale[:, None, :, None]
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / jnp.maximum(s, 1e-8)),
+                    -127, 127).astype(jnp.int8)
+
+
+def kv_scale_from(x: jax.Array) -> jax.Array:
+    """Prefill-calibrated per-(batch, head) int8 scale: max|x|/127."""
+    return (jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3))
+            / 127.0 + 1e-8)
+
+
+def cache_write(cache: jax.Array, new: jax.Array, idx,
+                axis: int = 1) -> jax.Array:
+    """Write ``new`` into ``cache`` at position ``idx`` along ``axis``.
+
+    Uses a one-hot masked blend instead of ``dynamic_update_slice``:
+    a DUS at a *traced* index into a dimension sharded by GSPMD forces
+    an involuntary all-gather of the whole cache every layer (measured:
+    ~60x the bytes on decode_32k); the masked blend is elementwise, so
+    each shard updates locally. For a full-length write (prefill with
+    S == max_seq) the new values replace the cache outright.
+    """
+    s_cache = cache.shape[axis]
+    s_new = new.shape[axis]
+    new = new.astype(cache.dtype)
+    if s_new == s_cache:
+        return new
+    if s_new > 1:
+        # prefill into a longer cache: pad to length (cache assumed
+        # empty beyond idx; positions outside the prompt stay zero)
+        pads = [(0, 0)] * cache.ndim
+        pads[axis] = (0, s_cache - s_new)
+        return jnp.pad(new, pads)
+    shape = [1] * cache.ndim
+    shape[axis] = s_cache
+    mask = (jnp.arange(s_cache) == jnp.asarray(idx, jnp.int32)
+            ).reshape(shape)
+    return jnp.where(mask, new, cache)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, kv_offset: int = 0,
+                    softmax_scale: float | None = None) -> jax.Array:
+    """Full-softmax attention in one einsum pair (no scan).
+
+    For short sequences (train_4k) this beats the blockwise form under
+    GSPMD: sharding propagates cleanly through straight-line einsums,
+    while while-loop boundaries made GSPMD all-gather q/k/v chunks
+    (measured on the collective-bound dry-run cells). Memory is
+    O(S^2 / heads-shards) — use blockwise beyond ~8k tokens.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    rep = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + kv_offset
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array | int, *,
+                     softmax_scale: float | None = None,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None) -> jax.Array:
+    """Single-token attention over a (possibly partially filled) cache.
+
+    q: [B, 1, Hq, D]; caches: [B, Skv, Hkv, D]; kv_len: valid prefix.
+    ``k_scale``/``v_scale`` ([B, Hkv], fp32): per-head dequantization
+    scales for an int8 cache — they factor out of both contractions
+    exactly, so the int8 values feed the MXU directly and HBM reads
+    stay at 1 byte/element (the decode step's dominant traffic).
+    """
+    b, _, hq, d = q.shape
+    _, skv, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    int8_cache = k_cache.dtype == jnp.int8
+    qr = q.reshape(b, hkv, rep, d)
+    qk_dtype = jnp.bfloat16 if int8_cache else k_cache.dtype
+    s = jnp.einsum("bhrd,bkhd->bhrk", qr.astype(qk_dtype),
+                   k_cache.astype(qk_dtype) if int8_cache else k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale[:, :, None, None]
+    mask = jnp.arange(skv)[None] < jnp.asarray(kv_len).reshape(-1, 1)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    pv_dtype = jnp.bfloat16 if int8_cache else v_cache.dtype
+    out = jnp.einsum("bhrk,bkhd->bhrd", p.astype(pv_dtype),
+                     v_cache.astype(pv_dtype) if int8_cache else v_cache,
+                     preferred_element_type=jnp.float32)
+    if v_scale is not None:
+        out = out * v_scale[:, :, None, None]
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+        "up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str = "silu",
+              rules: AxisRules = DEFAULT_RULES) -> jax.Array:
+    h = ACTIVATIONS[act](x @ p["gate"]) * (x @ p["up"])
+    h = with_logical_constraint(h, ("batch", None, "act_mlp"), rules=rules)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style grouped dispatch, token dropping)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    n_shared: int = 0               # shared (always-on) experts
+    capacity_factor: float = 1.25
+    group_size: int = 512           # tokens per dispatch group
+    router_z_loss: float = 1e-3
+
+
+def moe_specs(d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    specs = {
+        "router": ParamSpec((d_model, cfg.n_experts), ("embed", None),
+                            jnp.float32, fan_in=d_model),
+        "gate": ParamSpec((cfg.n_experts, d_model, cfg.d_ff),
+                          ("experts", "embed", None), dtype, fan_in=d_model),
+        "up": ParamSpec((cfg.n_experts, d_model, cfg.d_ff),
+                        ("experts", "embed", None), dtype, fan_in=d_model),
+        "down": ParamSpec((cfg.n_experts, cfg.d_ff, d_model),
+                          ("experts", None, "embed"), dtype, fan_in=cfg.d_ff),
+    }
+    if cfg.n_shared:
+        specs["shared"] = mlp_specs(d_model, cfg.d_ff * cfg.n_shared, dtype)
+    return specs
+
+
+def _top_k_dispatch(probs: jax.Array, top_k: int, capacity: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """GShard dispatch/combine tensors with capacity-based token dropping.
+
+    probs: [G, S, E] router probabilities.
+    Returns (dispatch [G,S,E,C] bool-as-dtype, combine [G,S,E,C]).
+    """
+    g, s, e = probs.shape
+    topv, topi = jax.lax.top_k(probs, top_k)               # [G, S, k]
+    prev_counts = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, s, e, capacity), probs.dtype)
+    combine = jnp.zeros((g, s, e, capacity), probs.dtype)
+    for slot in range(top_k):
+        sel = jax.nn.one_hot(topi[:, :, slot], e, dtype=jnp.int32)  # [G,S,E]
+        pos = jnp.cumsum(sel, axis=1) - 1 + prev_counts[:, None, :]
+        prev_counts = prev_counts + jnp.sum(sel, axis=1)
+        keep = (pos < capacity) & (sel > 0)
+        pos_c = jax.nn.one_hot(jnp.where(keep, pos, capacity),
+                               capacity, dtype=probs.dtype)  # [G,S,E,C]
+        d_slot = sel.astype(probs.dtype)[..., None] * pos_c
+        dispatch = dispatch + d_slot
+        combine = combine + d_slot * topv[:, :, slot][:, :, None, None]
+    return dispatch, combine
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str = "silu",
+              rules: AxisRules = DEFAULT_RULES
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, M] -> (out [B, S, M], aux_loss scalar).
+
+    Tokens are regrouped into dispatch groups of ``group_size`` so the
+    dispatch tensors stay O(T * E * C / E) rather than O(T * E * S).
+    """
+    b, s, m = x.shape
+    tokens = b * s
+    gs = min(cfg.group_size, tokens)
+    g = tokens // gs
+    # Tail tokens beyond g*gs fall into the last group via padding.
+    pad = g * gs < tokens
+    if pad:
+        g += 1
+        xt = jnp.pad(x.reshape(tokens, m), ((0, g * gs - tokens), (0, 0)))
+    else:
+        xt = x.reshape(tokens, m)
+    xg = xt.reshape(g, gs, m)
+    xg = with_logical_constraint(xg, ("expert_group", None, None), rules=rules)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])        # [G, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    z_loss = cfg.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    # load-balance auxiliary loss (Switch style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean((jax.nn.one_hot(jnp.argmax(probs, -1), cfg.n_experts,
+                                  dtype=jnp.float32)), axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * ce) + z_loss
+
+    capacity = max(1, int(math.ceil(gs * cfg.top_k * cfg.capacity_factor
+                                    / cfg.n_experts)))
+    dispatch, combine = _top_k_dispatch(probs, cfg.top_k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    xe = jnp.einsum("gsm,gsec->gecm", xg, dispatch)        # [G, E, C, M]
+    xe = with_logical_constraint(
+        xe, ("expert_group", "act_experts", None, None), rules=rules)
+    h = ACTIVATIONS[act](jnp.einsum("gecm,emf->gecf", xe, p["gate"])) \
+        * jnp.einsum("gecm,emf->gecf", xe, p["up"])
+    ye = jnp.einsum("gecf,efm->gecm", h, p["down"])
+    ye = with_logical_constraint(
+        ye, ("expert_group", "act_experts", None, None), rules=rules)
+    yg = jnp.einsum("gecm,gsec->gsm", ye, combine)         # [G, S, M]
+
+    y = yg.reshape(g * gs, m)[:tokens].reshape(b, s, m)
+    if cfg.n_shared:
+        y = y + mlp_apply(p["shared"], x, act, rules)
+    return y, aux

@@ -1,0 +1,620 @@
+"""Decoder-only LM covering the dense / MoE / MLA / VLM families.
+
+One parameterized implementation serves yi-34b, gemma-7b, llama3.2-1b,
+qwen3-8b, qwen3-moe-235b, deepseek-v2-236b and qwen2-vl-2b. Layers are
+stacked and scanned (``jax.lax.scan``) so the HLO stays bounded for
+94-layer models; an optional dense prefix (deepseek's first dense layer)
+is unrolled before the scanned MoE stack.
+
+The paper's technique (HeteroLinear hybrid quantization) is a
+first-class config: with ``hetero_quant`` set, every attention/MLP
+projection runs the QAT fake-quant forward of §4 (per-column bit-width
+by core assignment, layer-wise activation quantization); the serving
+path can deploy the same weights through the integer Pallas kernels.
+
+Entry points:
+  param_specs / init / abstract          — parameters
+  forward(params, tokens, ...)           — causal logits (train, prefill)
+  init_cache / decode_step               — KV-cache decoding (MLA uses the
+                                           compressed-cache absorbed form)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, with_logical_constraint
+from repro.quant.hybrid import LayerQuantConfig
+from repro.quant.uniform import fit_scale, qrange
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora: int = 512
+    q_lora: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroQuantConfig:
+    """Paper §4/§5 knobs applied to every projection of the LM."""
+    w_bits_lut: int = 4
+    a_bits: int = 4
+    ratio: float = 0.5         # columns on the flexible (bitplane) path
+
+    def layer_cfg(self) -> LayerQuantConfig:
+        return LayerQuantConfig(w_bits_lut=self.w_bits_lut,
+                                a_bits=self.a_bits, ratio=self.ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    vocab_pad_multiple: int = 256
+    rope_theta: float = 10000.0
+    qk_norm: bool = False                 # qwen3
+    act: str = "silu"                     # gemma: "gelu" (GeGLU)
+    moe: L.MoEConfig | None = None
+    n_dense_prefix: int = 0               # deepseek: 1 dense layer first
+    d_ff_dense: int | None = None         # ff of the dense-prefix layers
+    mla: MLAConfig | None = None
+    mrope_sections: tuple[int, ...] | None = None   # qwen2-vl
+    tie_embeddings: bool = False          # gemma / llama3.2 / qwen2-vl
+    hetero_quant: HeteroQuantConfig | None = None
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: str = "none"                   # none | full | dots
+    scan_unroll: bool = False             # full unroll (dry-run flops acct)
+    kv_cache_quant: bool = False          # int8 KV cache (per-head scales)
+    dense_attn_max: int = 8192            # dense softmax below, blockwise above
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def qk_dim(self) -> int:
+        if self.mla:
+            return self.mla.qk_nope_dim + self.mla.qk_rope_dim
+        return self.head_dim
+
+    @property
+    def v_head_dim(self) -> int:
+        return self.mla.v_dim if self.mla else self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: LMConfig) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    if cfg.mla:
+        a = cfg.mla
+        h = cfg.n_heads
+        return {
+            "wq_a": ParamSpec((d, a.q_lora), ("embed", None), dt),
+            "q_norm": L.rmsnorm_spec(a.q_lora, dt),
+            "wq_b": ParamSpec((a.q_lora, h * (a.qk_nope_dim + a.qk_rope_dim)),
+                              (None, "heads"), dt, fan_in=a.q_lora),
+            "wkv_a": ParamSpec((d, a.kv_lora + a.qk_rope_dim),
+                               ("embed", None), dt),
+            "kv_norm": L.rmsnorm_spec(a.kv_lora, dt),
+            "wkv_b": ParamSpec((a.kv_lora, h * (a.qk_nope_dim + a.v_dim)),
+                               (None, "heads"), dt, fan_in=a.kv_lora),
+            "wo": ParamSpec((h * a.v_dim, d), ("heads", "embed"), dt),
+        }
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, hq * hd), ("embed", "heads"), dt),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wo": ParamSpec((hq * hd, d), ("heads", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = L.rmsnorm_spec(hd, dt)
+        specs["k_norm"] = L.rmsnorm_spec(hd, dt)
+    return specs
+
+
+def _layer_specs(cfg: LMConfig, moe_layer: bool) -> dict:
+    d, dt = cfg.d_model, cfg.param_dtype
+    specs = {
+        "ln_attn": L.rmsnorm_spec(d, dt),
+        "attn": _attn_specs(cfg),
+        "ln_mlp": L.rmsnorm_spec(d, dt),
+    }
+    if moe_layer and cfg.moe is not None:
+        specs["moe"] = L.moe_specs(d, cfg.moe, dt)
+    else:
+        specs["mlp"] = L.mlp_specs(d, cfg.d_ff_dense or cfg.d_ff, dt)
+    return specs
+
+
+def param_specs(cfg: LMConfig) -> dict:
+    dt = cfg.param_dtype
+    n_scan = cfg.n_layers - cfg.n_dense_prefix
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), dt, "embed"),
+        "layers": L.stack_specs(_layer_specs(cfg, moe_layer=True), n_scan),
+        "ln_f": L.rmsnorm_spec(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                     ("embed", "vocab"), dt)
+    if cfg.n_dense_prefix:
+        specs["dense_prefix"] = [
+            _layer_specs(cfg, moe_layer=False)
+            for _ in range(cfg.n_dense_prefix)]
+    return specs
+
+
+def init(cfg: LMConfig, rng: jax.Array) -> dict:
+    return L.init_params(param_specs(cfg), rng)
+
+
+def abstract(cfg: LMConfig) -> dict:
+    return L.abstract_params(param_specs(cfg))
+
+
+def param_axes(cfg: LMConfig) -> dict:
+    return L.param_axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: LMConfig) -> int:
+    return L.param_count(param_specs(cfg))
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    total = param_count(cfg)
+    n_scan = cfg.n_layers - cfg.n_dense_prefix
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_params = 3 * cfg.d_model * cfg.moe.d_ff     # gate/up/down
+    total -= n_scan * (e - k) * expert_params
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Quantized / plain projection
+# ---------------------------------------------------------------------------
+
+
+def _proj(x: jax.Array, w: jax.Array, cfg: LMConfig) -> jax.Array:
+    """Projection with optional hybrid fake-quant (paper §4, QAT form)."""
+    hq = cfg.hetero_quant
+    if hq is None:
+        return x @ w
+    out = w.shape[-1]
+    n_serial = int(round(hq.ratio * out))
+    # Column split without data-dependent permutation (the KL allocation
+    # is applied at deploy time; under scan the boundary must be static).
+    is_serial = jnp.arange(out) < n_serial
+
+    def fq_w(w, bits):
+        lim = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+        s = jnp.maximum(lim.astype(jnp.float32), 1e-8) / (2 ** (bits - 1) - 1)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / s),
+                     -(2 ** (bits - 1)), 2 ** (bits - 1) - 1) * s
+        return (w + jax.lax.stop_gradient(q.astype(w.dtype) - w))
+
+    w_q = jnp.where(is_serial[None, :], fq_w(w, hq.w_bits_lut),
+                    fq_w(w, 4))
+    s_a = fit_scale(jax.lax.stop_gradient(x).astype(jnp.float32), hq.a_bits)
+    lo, hi = qrange(hq.a_bits)
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / s_a), lo, hi) * s_a
+    x_q = x + jax.lax.stop_gradient(x_q.astype(x.dtype) - x)
+    return x_q @ w_q
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _attention(p: dict, x: jax.Array, positions: jax.Array, cfg: LMConfig,
+               rules: AxisRules, cache: dict | None = None,
+               cache_len: jax.Array | int | None = None
+               ) -> tuple[jax.Array, dict | None]:
+    """Self-attention (full causal when cache is None, else one decode
+    step writing at ``cache_len``). Returns (out, updated_cache)."""
+    if cfg.mla:
+        return _mla_attention(p, x, positions, cfg, rules, cache, cache_len)
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = _proj(x, p["wq"], cfg).reshape(b, s, hq, hd)
+    k = _proj(x, p["wk"], cfg).reshape(b, s, hkv, hd)
+    v = _proj(x, p["wv"], cfg).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = L.apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = L.apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    q = with_logical_constraint(
+        q, ("batch", "act_seq_attn", "act_heads", None), rules=rules)
+
+    if cache is None:
+        k = with_logical_constraint(
+            k, ("batch", "act_seq_attn", "act_kv_heads", None), rules=rules)
+        if s <= cfg.dense_attn_max:
+            out = L.dense_attention(q, k, v, causal=True)
+        else:
+            out = L.blockwise_attention(q, k, v, causal=True,
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk)
+        new_cache = None
+    else:
+        idx = jnp.asarray(cache_len, jnp.int32)
+        quant = cfg.kv_cache_quant
+        if quant:
+            if s > 1:  # prefill calibrates the per-head scales
+                k_sc, v_sc = L.kv_scale_from(k), L.kv_scale_from(v)
+            else:      # decode clips into the prefill-calibrated scales
+                k_sc, v_sc = cache["k_scale"], cache["v_scale"]
+            k_store = L.quantize_kv(k, k_sc)
+            v_store = L.quantize_kv(v, v_sc)
+        else:
+            k_sc = v_sc = None
+            k_store, v_store = k, v
+        k_cache = L.cache_write(cache["k"], k_store, idx)
+        v_cache = L.cache_write(cache["v"], v_store, idx)
+        k_cache = with_logical_constraint(
+            k_cache, ("batch", "kv_seq", "act_kv_heads", None), rules=rules)
+        v_cache = with_logical_constraint(
+            v_cache, ("batch", "kv_seq", "act_kv_heads", None), rules=rules)
+        if s == 1:
+            out = L.decode_attention(q, k_cache, v_cache, kv_len=idx + s,
+                                     k_scale=k_sc, v_scale=v_sc)
+        else:
+            # prefill: attend within the freshly written prompt
+            out = L.blockwise_attention(q, k, v, causal=True,
+                                        q_chunk=cfg.q_chunk,
+                                        kv_chunk=cfg.kv_chunk,
+                                        kv_offset=0)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if quant:
+            new_cache["k_scale"] = k_sc
+            new_cache["v_scale"] = v_sc
+
+    out = with_logical_constraint(
+        out, ("batch", "act_seq_attn", "act_heads", None), rules=rules)
+    out = out.reshape(b, s, hq * hd)
+    return _proj(out, p["wo"], cfg), new_cache
+
+
+def _mla_attention(p: dict, x: jax.Array, positions: jax.Array,
+                   cfg: LMConfig, rules: AxisRules,
+                   cache: dict | None, cache_len) -> tuple[jax.Array, dict | None]:
+    """DeepSeek-V2 MLA. Full form for train/prefill; absorbed compressed-
+    cache form for decode (the cache holds only [B, S, kv_lora + rope])."""
+    a = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+
+    q = _proj(L.rmsnorm(_proj(x, p["wq_a"], cfg), p["q_norm"], cfg.norm_eps),
+              p["wq_b"], cfg).reshape(b, s, h, a.qk_nope_dim + a.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = _proj(x, p["wkv_a"], cfg)                        # [B,S,lora+rope]
+    c, k_rope = jnp.split(ckv, [a.kv_lora], axis=-1)
+    c = L.rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is None:
+        kv = (c @ p["wkv_b"]).reshape(b, s, h, a.qk_nope_dim + a.v_dim)
+        k_nope, v = jnp.split(kv, [a.qk_nope_dim], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, a.qk_rope_dim))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qf = with_logical_constraint(
+            qf, ("batch", "act_seq_attn", "act_heads", None), rules=rules)
+        out = L.blockwise_attention(qf, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk,
+                                    softmax_scale=scale)
+        new_cache = None
+    elif s > 1:
+        # Prefill: write the compressed cache, attend within the prompt.
+        idx = jnp.asarray(cache_len, jnp.int32)
+        c_cache = L.cache_write(cache["c"], c, idx)
+        r_cache = L.cache_write(cache["k_rope"], k_rope[:, :, 0, :], idx)
+        kv = (c @ p["wkv_b"]).reshape(b, s, h, a.qk_nope_dim + a.v_dim)
+        k_nope, v = jnp.split(kv, [a.qk_nope_dim], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, a.qk_rope_dim))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = L.blockwise_attention(qf, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk,
+                                    softmax_scale=scale)
+        new_cache = {"c": c_cache, "k_rope": r_cache}
+    else:
+        # Absorbed decode: score and read directly in the compressed space.
+        idx = jnp.asarray(cache_len, jnp.int32)
+        c_cache = L.cache_write(cache["c"], c, idx)
+        r_cache = L.cache_write(cache["k_rope"], k_rope[:, :, 0, :], idx)
+        c_cache = with_logical_constraint(
+            c_cache, ("batch", "kv_seq", None), rules=rules)
+        wkv_b = p["wkv_b"].reshape(a.kv_lora, h, a.qk_nope_dim + a.v_dim)
+        wk, wv = jnp.split(wkv_b, [a.qk_nope_dim], axis=-1)
+        q_c = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                         wk.astype(jnp.float32))           # [B,1,H,lora]
+        s_c = jnp.einsum("bqhc,bkc->bhqk", q_c,
+                         c_cache.astype(jnp.float32))
+        s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                         r_cache.astype(jnp.float32))
+        logits = (s_c + s_r) * scale
+        skv = c_cache.shape[1]
+        mask = jnp.arange(skv)[None] < (idx + s)
+        logits = jnp.where(mask[:, None, None], logits, L.NEG_INF)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        o_c = jnp.einsum("bhqk,bkc->bqhc", pattn,
+                         c_cache.astype(jnp.float32))      # [B,1,H,lora]
+        out = jnp.einsum("bqhc,chd->bqhd", o_c, wv.astype(jnp.float32))
+        out = out.astype(x.dtype)
+        new_cache = {"c": c_cache, "k_rope": r_cache}
+
+    out = out.reshape(b, s, h * a.v_dim)
+    return _proj(out, p["wo"], cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Layer body + full forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_apply(p: dict, x: jax.Array, positions: jax.Array, cfg: LMConfig,
+                 rules: AxisRules, moe_layer: bool,
+                 cache: dict | None = None, cache_len=None
+                 ) -> tuple[jax.Array, jax.Array, dict | None]:
+    """Pre-norm block. Returns (x, aux_loss, new_cache)."""
+    h_attn, new_cache = _attention(p["attn"], L.rmsnorm(x, p["ln_attn"],
+                                                        cfg.norm_eps),
+                                   positions, cfg, rules, cache, cache_len)
+    x = x + h_attn
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+    h_norm = L.rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    if moe_layer and cfg.moe is not None:
+        h_ffn, aux = L.moe_apply(p["moe"], h_norm, cfg.moe, cfg.act, rules)
+    else:
+        h_ffn, aux = L.mlp_apply(p["mlp"], h_norm, cfg.act, rules), 0.0
+    x = x + h_ffn
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+    return x, jnp.asarray(aux, jnp.float32), new_cache
+
+
+def _remat_wrap(fn, cfg: LMConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig,
+            rules: AxisRules = DEFAULT_RULES,
+            positions: jax.Array | None = None,
+            extra_embed: jax.Array | None = None,
+            last_only: bool = False,
+            slice_vocab: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Causal logits for train/prefill. tokens: [B, S] int32.
+
+    ``slice_vocab=False`` returns the PADDED-vocab logits — slicing a
+    GSPMD-sharded vocab dim forces a full-logits all-gather (67 GB/step
+    measured on gemma train_4k); the loss path masks instead.
+
+    ``extra_embed`` (VLM/audio frontends): [B, S, d_model] added to the
+    token embedding (precomputed patch/frame embeddings, stubbed per the
+    task spec). Returns (logits [B, S, vocab], aux_loss).
+    """
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]                          # [B, S, M]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+
+    for p_dense in params.get("dense_prefix", []):
+        def dense_body(x, p=p_dense):
+            y, _, _ = _layer_apply(p, x, positions, cfg, rules,
+                                   moe_layer=False)
+            return y
+        x = _remat_wrap(dense_body, cfg)(x)
+
+    def scan_body(carry, p_layer):
+        x, aux = carry
+        def body(x):
+            return _layer_apply(p_layer, x, positions, cfg, rules,
+                                moe_layer=True)[:2]
+        y, aux_i = _remat_wrap(body, cfg)(x)
+        return (y, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                               params["layers"], unroll=cfg.scan_unroll)
+
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = (x @ unembed).astype(jnp.float32)
+    logits = with_logical_constraint(logits, ("batch", None, "vocab_act"),
+                                     rules=rules)
+    if not slice_vocab:
+        return logits, aux
+    return logits[..., :cfg.vocab], aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> dict:
+    n_scan = cfg.n_layers - cfg.n_dense_prefix
+    if cfg.mla:
+        a = cfg.mla
+        layer = {
+            "c": ParamSpec((batch, max_seq, a.kv_lora),
+                           ("batch", "kv_seq", None), dtype, "zeros"),
+            "k_rope": ParamSpec((batch, max_seq, a.qk_rope_dim),
+                                ("batch", "kv_seq", None), dtype, "zeros"),
+        }
+    else:
+        kv_dt = jnp.int8 if cfg.kv_cache_quant else dtype
+        layer = {
+            "k": ParamSpec((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           kv_dt, "zeros"),
+            "v": ParamSpec((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_seq", "act_kv_heads", None),
+                           kv_dt, "zeros"),
+        }
+        if cfg.kv_cache_quant:
+            layer["k_scale"] = ParamSpec((batch, cfg.n_kv_heads),
+                                         ("batch", "act_kv_heads"),
+                                         jnp.float32, "ones")
+            layer["v_scale"] = ParamSpec((batch, cfg.n_kv_heads),
+                                         ("batch", "act_kv_heads"),
+                                         jnp.float32, "ones")
+    specs = {"layers": L.stack_specs(layer, n_scan)}
+    if cfg.n_dense_prefix:
+        specs["dense_prefix"] = [dict(layer) for _ in range(cfg.n_dense_prefix)]
+    return specs
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    return L.init_params(cache_specs(cfg, batch, max_seq, dtype), jax.random.key(0))
+
+
+def prefill(params: dict, tokens: jax.Array, cache: dict, cfg: LMConfig,
+            rules: AxisRules = DEFAULT_RULES,
+            extra_embed: jax.Array | None = None,
+            last_only: bool = False) -> tuple[jax.Array, dict]:
+    """Score the prompt AND fill the KV cache (positions [0, S)).
+
+    Returns (logits [B, S, vocab], cache). Subsequent ``decode_step``
+    calls continue from cache_len = S.
+    """
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+
+    new_cache: dict[str, Any] = {}
+    if cfg.n_dense_prefix:
+        new_cache["dense_prefix"] = []
+        for p_dense, c_dense in zip(params["dense_prefix"],
+                                    cache["dense_prefix"]):
+            x, _, c_new = _layer_apply(p_dense, x, positions, cfg, rules,
+                                       moe_layer=False, cache=c_dense,
+                                       cache_len=0)
+            new_cache["dense_prefix"].append(c_new)
+
+    def scan_body(x, xs):
+        p_layer, c_layer = xs
+        y, _, c_new = _layer_apply(p_layer, x, positions, cfg, rules,
+                                   moe_layer=True, cache=c_layer,
+                                   cache_len=0)
+        return y, c_new
+
+    x, cache_layers = jax.lax.scan(scan_body, x,
+                                   (params["layers"], cache["layers"]),
+                                   unroll=cfg.scan_unroll)
+    new_cache["layers"] = cache_layers
+
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits[..., :cfg.vocab], new_cache
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict,
+                cache_len: jax.Array | int, cfg: LMConfig,
+                rules: AxisRules = DEFAULT_RULES,
+                extra_embed: jax.Array | None = None
+                ) -> tuple[jax.Array, dict]:
+    """One decode step. token: [B, 1] int32; returns (logits [B, vocab],
+    updated cache). ``cache_len`` is the number of valid positions."""
+    b = token.shape[0]
+    idx = jnp.asarray(cache_len, jnp.int32)
+    positions = jnp.broadcast_to(idx.reshape(-1, 1), (b, 1)).astype(jnp.int32)
+    x = params["embed"][token]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+
+    new_cache: dict[str, Any] = {}
+    if cfg.n_dense_prefix:
+        new_cache["dense_prefix"] = []
+        for p_dense, c_dense in zip(params["dense_prefix"],
+                                    cache["dense_prefix"]):
+            x, _, c_new = _layer_apply(p_dense, x, positions, cfg, rules,
+                                       moe_layer=False, cache=c_dense,
+                                       cache_len=idx)
+            new_cache["dense_prefix"].append(c_new)
+
+    def scan_body(x, xs):
+        p_layer, c_layer = xs
+        y, _, c_new = _layer_apply(p_layer, x, positions, cfg, rules,
+                                   moe_layer=True, cache=c_layer,
+                                   cache_len=idx)
+        return y, c_new
+
+    x, cache_layers = jax.lax.scan(scan_body, x,
+                                   (params["layers"], cache["layers"]),
+                                   unroll=cfg.scan_unroll)
+    new_cache["layers"] = cache_layers
+
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = (x[:, 0] @ unembed).astype(jnp.float32)
+    return logits[..., :cfg.vocab], new_cache

@@ -1,0 +1,401 @@
+"""Mamba2 — state-space duality (SSD), chunked, in pure JAX.
+
+The SSD form (Dao & Gu, 2024) computes the selective-SSM recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t ⊗ x_t),   y_t = C_t · h_t
+
+as a block decomposition over sequence chunks: a quadratic *intra-chunk*
+term (a masked attention-like matmul — MXU friendly) plus a linear
+*inter-chunk* recurrence over per-chunk states (a short ``lax.scan``).
+Peak memory is O(S * Lc) instead of O(S^2), and the chunk length ``Lc``
+plays exactly the role of a kernel block size.
+
+Decode keeps a recurrent state [B, H, P, N] plus a short conv window —
+O(1) per token, which is what makes the ``long_500k`` shape runnable.
+
+Layer structure (Mamba2 block):
+    in: z, x = W_z u, W_x u;  B, C = W_b u, W_c u;  dt = softplus(W_dt u + bias)
+    x, B, C <- causal depthwise conv (kernel 4) + silu
+    y = SSD(x, dt, A, B, C) + D ⊙ x
+    out = W_o (rmsnorm(y) * silu(z))        (gated norm)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, with_logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int                 # = expand * d_model (2x)
+    head_dim: int = 64           # P
+    d_state: int = 128           # N
+    n_groups: int = 1            # G (B/C shared across heads per group)
+    conv_kernel: int = 4
+    chunk: int = 256             # Lc
+    dt_min: float = 1e-3
+    dt_max: float = 1e-1
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMLMConfig:
+    """Decoder-only Mamba2 LM (mamba2-780m)."""
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    ssm: SSMConfig
+    vocab_pad_multiple: int = 256
+    tie_embeddings: bool = False
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: str = "none"
+    scan_unroll: bool = False
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    m, di, gn, h = cfg.d_model, cfg.d_inner, cfg.n_groups * cfg.d_state, \
+        cfg.n_heads
+    k = cfg.conv_kernel
+    return {
+        "wz": ParamSpec((m, di), ("embed", "mlp"), dtype),
+        "wx": ParamSpec((m, di), ("embed", "mlp"), dtype),
+        "wb": ParamSpec((m, gn), ("embed", None), dtype),
+        "wc": ParamSpec((m, gn), ("embed", None), dtype),
+        "wdt": ParamSpec((m, h), ("embed", None), dtype),
+        "conv_x": ParamSpec((k, di), (None, "mlp"), dtype),
+        "conv_b": ParamSpec((k, gn), (None, None), dtype),
+        "conv_c": ParamSpec((k, gn), (None, None), dtype),
+        "a_log": ParamSpec((h,), (None,), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((h,), (None,), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((h,), (None,), jnp.float32, "zeros"),
+        "norm": L.rmsnorm_spec(di, dtype),
+        "wo": ParamSpec((di, m), ("mlp", "embed"), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, window: jax.Array | None = None
+                 ) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]. ``window`` ([B, K-1, C])
+    prepends decode history instead of zero padding."""
+    k = w.shape[0]
+    if window is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([window.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):                       # small static unroll (k = 4)
+        out = out + xp[:, i:i + s].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, cfg: SSMConfig,
+                initial_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: [B,S,H,P]; dt: [B,S,H] (positive); a: [H] (negative);
+    b, c: [B,S,G,N]. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    lc = min(cfg.chunk, s)
+    pad = (-s) % lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // lc
+    rep = h // g
+
+    xc = x.reshape(bs, nc, lc, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bs, nc, lc, h).astype(jnp.float32)
+    bc = b.reshape(bs, nc, lc, g, n).astype(jnp.float32)
+    cc = c.reshape(bs, nc, lc, g, n).astype(jnp.float32)
+    bh = jnp.repeat(bc, rep, axis=3)                     # [B,nc,Lc,H,N]
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                    # [B,nc,Lc,H] (<0)
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (masked quadratic term)
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # [B,nc,i,j,H]
+    ii = jnp.arange(lc)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", ch, bh)
+    att = cb * decay * dtc[:, :, None, :, :]             # weight by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # chunk states: S_c = sum_j exp(da_cs[last] - da_cs[j]) dt_j B_j x_j^T
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # [B,nc,Lc,H]
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        decay_states * dtc, bh, xc)      # [B,nc,H,P,N]
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])            # [B,nc,H]
+
+    def scan_fn(h_prev, inp):
+        dec, st = inp                                    # [B,H], [B,H,P,N]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                             # emit state *before*
+
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bs, h, p, n), jnp.float32))
+    final, h_prevs = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                      jnp.moveaxis(states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_i += C_i · (exp(da_cs_i) * h_prev)
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp",
+                         ch * jnp.exp(da_cs)[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(bs, nc * lc, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, state: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """One-token recurrence. x: [B,H,P]; dt: [B,H]; b, c: [B,G,N];
+    state: [B,H,P,N]. Returns (y [B,H,P], new_state)."""
+    h, g = x.shape[1], b.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    da = dt.astype(jnp.float32) * a[None, :]
+    decay = jnp.exp(da)[..., None, None]                 # [B,H,1,1]
+    inc = (dt.astype(jnp.float32)[..., None, None]
+           * x.astype(jnp.float32)[..., None] * bh[:, :, None, :])
+    new_state = state.astype(jnp.float32) * decay + inc
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block forward
+# ---------------------------------------------------------------------------
+
+
+def block_apply(p: dict, u: jax.Array, cfg: SSMConfig,
+                rules: AxisRules = DEFAULT_RULES,
+                cache: dict | None = None
+                ) -> tuple[jax.Array, dict | None]:
+    """u: [B, S, M]. With ``cache`` (decode): S == 1, cache holds
+    {"state": [B,H,P,N], "conv": [B,K-1, d_inner + 2GN]}."""
+    bs, s, _ = u.shape
+    h, pdim, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    gn = g * n
+
+    z = u @ p["wz"]
+    x = u @ p["wx"]
+    b = u @ p["wb"]
+    c = u @ p["wc"]
+    dt_raw = (u @ p["wdt"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    if cache is None:
+        xbc_conv = _causal_conv(xbc, conv_w)
+        new_cache = None
+        conv_window = None
+    else:
+        conv_window = cache["conv"]
+        xbc_conv = _causal_conv(xbc, conv_w, window=conv_window)
+        new_window = jnp.concatenate([conv_window[:, 1:],
+                                      xbc.astype(conv_window.dtype)], axis=1)
+        new_cache = {"conv": new_window}
+    xbc_conv = jax.nn.silu(xbc_conv)
+    x, b, c = jnp.split(xbc_conv, [cfg.d_inner, cfg.d_inner + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None, :])
+    xh = x.reshape(bs, s, h, pdim)
+    xh = with_logical_constraint(xh, ("batch", None, "act_heads", None),
+                                 rules=rules)
+    bg = b.reshape(bs, s, g, n)
+    cg = c.reshape(bs, s, g, n)
+
+    if cache is None:
+        y, _ = ssd_chunked(xh, dt, a, bg, cg, cfg)
+    else:
+        y1, new_state = ssd_step(xh[:, 0], dt[:, 0], a, bg[:, 0], cg[:, 0],
+                                 cache["state"])
+        y = y1[:, None]
+        new_cache["state"] = new_state
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bs, s, cfg.d_inner)
+    y = L.rmsnorm(y, p["norm"]) * jax.nn.silu(z)
+    return y @ p["wo"], new_cache
+
+
+def block_cache_specs(cfg: SSMConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        "state": ParamSpec((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           ("batch", "act_heads", None, None), jnp.float32,
+                           "zeros"),
+        "conv": ParamSpec((batch, cfg.conv_kernel - 1, cfg.d_inner + 2 * gn),
+                          ("batch", None, "mlp"), dtype, "zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: SSMLMConfig) -> dict:
+    dt = cfg.param_dtype
+    layer = {
+        "ln": L.rmsnorm_spec(cfg.d_model, dt),
+        "ssm": block_specs(cfg.ssm, dt),
+    }
+    specs = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), dt, "embed"),
+        "layers": L.stack_specs(layer, cfg.n_layers),
+        "ln_f": L.rmsnorm_spec(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                     ("embed", "vocab"), dt)
+    return specs
+
+
+def init(cfg: SSMLMConfig, rng: jax.Array) -> dict:
+    params = L.init_params(param_specs(cfg), rng)
+    # a_log init: A in [1, 16] (mamba2 default), dt_bias ~ softplus-inv of
+    # a log-uniform dt in [dt_min, dt_max].
+    def fix(layer_p):
+        h = cfg.ssm.n_heads
+        a0 = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32))
+        dt0 = jnp.exp(jnp.linspace(jnp.log(cfg.ssm.dt_min),
+                                   jnp.log(cfg.ssm.dt_max), h))
+        inv_softplus = jnp.log(jnp.expm1(dt0))
+        layer_p["ssm"]["a_log"] = jnp.broadcast_to(
+            a0, layer_p["ssm"]["a_log"].shape)
+        layer_p["ssm"]["dt_bias"] = jnp.broadcast_to(
+            inv_softplus, layer_p["ssm"]["dt_bias"].shape)
+        return layer_p
+    params["layers"] = fix(params["layers"])
+    return params
+
+
+def abstract(cfg: SSMLMConfig) -> dict:
+    return L.abstract_params(param_specs(cfg))
+
+
+def param_axes(cfg: SSMLMConfig) -> dict:
+    return L.param_axes_tree(param_specs(cfg))
+
+
+def param_count(cfg: SSMLMConfig) -> int:
+    return L.param_count(param_specs(cfg))
+
+
+def forward(params: dict, tokens: jax.Array, cfg: SSMLMConfig,
+            rules: AxisRules = DEFAULT_RULES,
+            positions: jax.Array | None = None,
+            extra_embed: jax.Array | None = None,
+            last_only: bool = False,
+            slice_vocab: bool = True) -> tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+    x = with_logical_constraint(x, ("batch", "act_res", None), rules=rules)
+
+    def body(x, p_layer):
+        def inner(x):
+            y, _ = block_apply(p_layer["ssm"],
+                               L.rmsnorm(x, p_layer["ln"], cfg.norm_eps),
+                               cfg.ssm, rules)
+            return x + y
+        fn = inner
+        if cfg.remat == "full":
+            fn = jax.checkpoint(inner,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(x), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = (x @ unembed).astype(jnp.float32)
+    logits = with_logical_constraint(logits, ("batch", None, "vocab_act"),
+                                     rules=rules)
+    if not slice_vocab:
+        return logits, jnp.float32(0.0)
+    return logits[..., :cfg.vocab], jnp.float32(0.0)
+
+
+def cache_specs(cfg: SSMLMConfig, batch: int, max_seq: int = 0,
+                dtype=jnp.bfloat16) -> dict:
+    del max_seq  # recurrent state is O(1) in sequence length
+    return {"layers": L.stack_specs(
+        block_cache_specs(cfg.ssm, batch, dtype), cfg.n_layers)}
+
+
+def init_cache(cfg: SSMLMConfig, batch: int, max_seq: int = 0,
+               dtype=jnp.bfloat16) -> dict:
+    return L.init_params(cache_specs(cfg, batch, max_seq, dtype),
+                         jax.random.key(0))
+
+
+def decode_step(params: dict, token: jax.Array, cache: dict,
+                cache_len, cfg: SSMLMConfig,
+                rules: AxisRules = DEFAULT_RULES,
+                extra_embed: jax.Array | None = None
+                ) -> tuple[jax.Array, dict]:
+    del cache_len  # state is positionless
+    x = params["embed"][token]
+    if extra_embed is not None:
+        x = x + extra_embed.astype(x.dtype)
+
+    def body(x, xs):
+        p_layer, c_layer = xs
+        y, c_new = block_apply(p_layer["ssm"],
+                               L.rmsnorm(x, p_layer["ln"], cfg.norm_eps),
+                               cfg.ssm, rules, cache=c_layer)
+        return x + y, c_new
+
+    x, cache_layers = jax.lax.scan(body, x, (params["layers"],
+                                             cache["layers"]),
+                                   unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = (x[:, 0] @ unembed).astype(jnp.float32)
+    return logits[..., :cfg.vocab], {"layers": cache_layers}

@@ -1,0 +1,43 @@
+"""Distribution substrate: meshes, logical-axis sharding, compression.
+
+The framework describes every parameter/activation with *logical* axis
+names ("batch", "embed", "heads", "experts", ...). A rule table maps
+logical axes onto mesh axes (("pod",) "data", "model"), with automatic
+divisibility fallback (an axis that does not divide evenly is left
+replicated rather than unevenly sharded). This is the same design as
+MaxText/T5X logical axis rules, reimplemented minimally.
+"""
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    AxisRules,
+    logical_to_spec,
+    shard_params_tree,
+    spec_tree_for,
+    with_logical_constraint,
+    zero1_spec,
+)
+from repro.parallel.compress import (
+    CompressionState,
+    compress_int8,
+    decompress_int8,
+    init_compression_state,
+    compressed_grad_allreduce,
+)
+from repro.parallel.pipeline import gpipe, stage_params_from_stack
+
+__all__ = [
+    "DEFAULT_RULES",
+    "AxisRules",
+    "logical_to_spec",
+    "shard_params_tree",
+    "spec_tree_for",
+    "with_logical_constraint",
+    "zero1_spec",
+    "CompressionState",
+    "compress_int8",
+    "decompress_int8",
+    "init_compression_state",
+    "compressed_grad_allreduce",
+    "gpipe",
+    "stage_params_from_stack",
+]

@@ -1,0 +1,98 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+ node scale the inter-pod (DCN / slow-link) all-reduce of
+gradients dominates step time for small per-pod batches. We implement
+int8 uniform compression with **error feedback** (EF-SGD style): the
+quantization residual of step t is added back to the gradient of step
+t+1 before compression, which provably preserves SGD convergence for
+unbiased-ish compressors.
+
+Design:
+  * per-leaf symmetric int8 codes with a single fp32 max-abs scale
+    (scale exchange is O(1) per leaf — negligible);
+  * compression happens *before* the pod-axis reduction and
+    decompression after, so the slow link moves 1/4 the bytes of bf16
+    (1/2 of fp8, 1/4 of fp32);
+  * the intra-pod (fast ICI) reduction stays full precision.
+
+All functions are jit-safe pytree transforms; the collective itself is
+expressed with ``jax.lax.psum`` under ``shard_map`` or left to GSPMD
+when used inside ``pjit`` (we compress, constrain sharding, reduce,
+decompress).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    """Error-feedback residual, congruent with the grad tree."""
+    residual: Any
+
+
+def init_compression_state(grads: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda g: jnp.zeros_like(g, dtype=jnp.float32),
+                              grads))
+
+
+def compress_int8(g: jax.Array, eps: float = 1e-12) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (codes, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), eps) / 127.0
+    codes = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def decompress_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compressed_grad_allreduce(grads: Any, state: CompressionState,
+                              axis_name: str | None = None,
+                              n_replicas: int | None = None
+                              ) -> tuple[Any, CompressionState]:
+    """Error-feedback int8 all-reduce over ``axis_name``.
+
+    Inside ``shard_map`` pass the pod axis name; ``n_replicas`` overrides
+    the averaging divisor (defaults to the axis size). Outside shard_map
+    (axis_name=None) this degrades to pure compress/decompress with
+    error feedback — GSPMD then reduces the decompressed values; the
+    error-feedback residual math is identical either way, which is what
+    the unit tests pin down.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = jax.tree.leaves(state.residual)
+
+    new_grads = []
+    new_res = []
+    for g, r in zip(leaves, res_leaves):
+        g32 = g.astype(jnp.float32) + r
+        codes, scale = compress_int8(g32)
+        if axis_name is not None:
+            summed = jax.lax.psum(codes.astype(jnp.int32), axis_name)
+            scale_sum = jax.lax.psum(scale, axis_name)
+            n = n_replicas or jax.lax.psum(1, axis_name)
+            # codes were scaled per-replica; use the mean scale for the
+            # sum of codes (exact when scales match, tight otherwise).
+            reduced = summed.astype(jnp.float32) * (scale_sum / n) / n
+        else:
+            reduced = decompress_int8(codes, scale)
+        local_deq = decompress_int8(codes, scale)
+        new_res.append(g32 - local_deq)            # error feedback
+        new_grads.append(reduced.astype(g.dtype))
+
+    return (jax.tree.unflatten(treedef, new_grads),
+            CompressionState(jax.tree.unflatten(treedef, new_res)))
+
+
+def compression_ratio(grads: Any) -> float:
+    """Bytes(int8 codes + scales) / bytes(original) for a grad tree."""
+    orig = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    comp = sum(g.size + 4 for g in jax.tree.leaves(grads))
+    return comp / max(orig, 1)

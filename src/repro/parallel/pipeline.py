@@ -1,0 +1,90 @@
+"""Opt-in pipeline parallelism over the "pod" axis (GPipe schedule).
+
+The baseline multi-pod plan treats "pod" as pure data parallelism (the
+DCN link only carries the gradient all-reduce, optionally int8-
+compressed). For models whose *weights* exceed one pod's aggregate HBM,
+this module provides the alternative: the layer stack is split into
+``n_stages`` contiguous stages (one per pod), micro-batches stream
+through the stages, and only stage-boundary activations cross the slow
+link — O(micro_batch x d_model) per tick instead of O(grad bytes).
+
+Implementation: ``shard_map`` over the pipeline axis. Each stage holds
+its layer shard; a GPipe schedule runs ``n_micro + n_stages - 1`` ticks
+with ``lax.ppermute`` moving boundary activations stage -> stage+1.
+Bubble fraction = (n_stages - 1) / (n_micro + n_stages - 1) — choose
+n_micro >> n_stages. Forward-only here (inference / evaluation path);
+training through the pipeline composes with jax.grad because every op
+(ppermute included) is differentiable, at the cost of storing per-tick
+activations (use remat around ``body`` for long pipelines).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def gpipe(body: Callable, mesh: Mesh, axis: str, n_micro: int):
+    """Build a pipelined apply: (stage_params, x) -> y.
+
+    ``body(stage_params, x_mb) -> y_mb`` is one stage's computation on
+    one micro-batch (same output shape as input). ``stage_params``
+    leaves must have a leading stage dimension of size
+    ``mesh.shape[axis]``; ``x``'s leading batch dim must divide by
+    ``n_micro``.
+    """
+    n_stages = mesh.shape[axis]
+
+    def pipelined(stage_params, x):
+        b = x.shape[0]
+        mb = b // n_micro
+        mbs = x.reshape(n_micro, mb, *x.shape[1:])
+
+        def local(params_local, mbs_local):
+            # params_local: this stage's shard (leading dim 1) -> squeeze
+            params_local = jax.tree.map(lambda p: p[0], params_local)
+            stage = jax.lax.axis_index(axis)
+            fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+            carry = jnp.zeros_like(mbs_local[0])
+            outs = jnp.zeros_like(mbs_local)
+            for t in range(n_micro + n_stages - 1):
+                # stage 0 injects micro-batch t; others take the wire
+                inject = mbs_local[jnp.minimum(t, n_micro - 1)]
+                inp = jnp.where(stage == 0, inject, carry)
+                out = body(params_local, inp)
+                # last stage commits micro-batch t - (n_stages - 1)
+                oi = t - (n_stages - 1)
+                commit = jnp.logical_and(stage == n_stages - 1, oi >= 0)
+                outs = jax.lax.cond(
+                    commit,
+                    lambda o: o.at[jnp.maximum(oi, 0)].set(out),
+                    lambda o: o,
+                    outs)
+                carry = jax.lax.ppermute(out, axis, fwd)
+            # broadcast the last stage's outputs to every stage member
+            mask = (stage == n_stages - 1).astype(outs.dtype)
+            return jax.lax.psum(outs * mask, axis)
+
+        spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+        y = shard_map(local, mesh=mesh,
+                      in_specs=(spec_params, P()),
+                      out_specs=P(),
+                      check_rep=False)(stage_params, mbs)
+        return y.reshape(b, *x.shape[1:])
+
+    return pipelined
+
+
+def stage_params_from_stack(params_stacked, n_stages: int):
+    """[L, ...] layer-stacked params -> [n_stages, L/n_stages, ...]."""
+    def split(p):
+        l = p.shape[0]
+        if l % n_stages:
+            raise ValueError(f"layers {l} % stages {n_stages} != 0")
+        return p.reshape(n_stages, l // n_stages, *p.shape[1:])
+    return jax.tree.map(split, params_stacked)

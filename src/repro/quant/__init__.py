@@ -1,0 +1,39 @@
+"""Quantization substrate for N3H-Core.
+
+Implements the paper's uniform quantizer (Eq. 2), the filter-wise hybrid
+mixed-precision scheme (Fig. 6), the KL-divergence filter->core
+allocation, and quantization-aware-training (STE) utilities.
+"""
+from repro.quant.uniform import (
+    qrange,
+    quantize,
+    dequantize,
+    fake_quant,
+    fake_quant_per_channel,
+    fit_scale,
+    fit_scale_per_channel,
+    quant_snr_db,
+)
+from repro.quant.hybrid import (
+    LayerQuantConfig,
+    HybridQuantizedWeight,
+    hybrid_quantize_weight,
+    hybrid_fake_quant_weight,
+    kl_filter_allocation,
+)
+
+__all__ = [
+    "qrange",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "fake_quant_per_channel",
+    "fit_scale",
+    "fit_scale_per_channel",
+    "quant_snr_db",
+    "LayerQuantConfig",
+    "HybridQuantizedWeight",
+    "hybrid_quantize_weight",
+    "hybrid_fake_quant_weight",
+    "kl_filter_allocation",
+]

@@ -1,0 +1,94 @@
+"""Uniform symmetric quantizer — paper Eq. (2).
+
+    x_hat = f_q(x, s) = clip(round(x / s), alpha_hat, beta_hat)
+
+with ``alpha_hat = -2^(N_bits-1)`` and ``beta_hat = 2^(N_bits-1) - 1``.
+(The paper's printed clip() swaps min/max arguments; we implement the
+standard clamp.)
+
+All functions are jit-safe; ``bits`` is static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Integer range (alpha_hat, beta_hat) of a signed ``bits``-bit code."""
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def quantize(x: jax.Array, s: jax.Array, bits: int) -> jax.Array:
+    """Eq. (2): real tensor -> integer codes (round-to-nearest-even)."""
+    lo, hi = qrange(bits)
+    q = jnp.clip(jnp.round(x / s), lo, hi)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, s: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * s
+
+
+def fit_scale(x: jax.Array, bits: int, eps: float = 1e-8) -> jax.Array:
+    """Symmetric max-abs scale: s = max|x| / beta_hat (per tensor)."""
+    _, hi = qrange(bits)
+    return jnp.maximum(jnp.max(jnp.abs(x)), eps) / hi
+
+
+def fit_scale_per_channel(x: jax.Array, bits: int, axis: int = 0,
+                          eps: float = 1e-8) -> jax.Array:
+    """Per-channel (filter-wise) scales along ``axis``; keepdims for broadcast."""
+    _, hi = qrange(bits)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    m = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    return jnp.maximum(m, eps) / hi
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant(x: jax.Array, s: jax.Array, bits: int) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator.
+
+    Forward: dequantize(quantize(x, s, bits), s).
+    Backward: identity for x within the clip range, zero outside
+    (the standard STE used in quantization-aware training).
+    """
+    return dequantize(quantize(x, s, bits), s)
+
+
+def _fake_quant_fwd(x, s, bits):
+    lo, hi = qrange(bits)
+    in_range = jnp.logical_and(x / s >= lo, x / s <= hi)
+    return fake_quant(x, s, bits), in_range
+
+
+def _fake_quant_bwd(bits, res, g):
+    in_range = res
+    gx = jnp.where(in_range, g, 0.0)
+    # scale is treated as a calibration constant (no gradient), matching
+    # the paper's max-abs calibrated uniform quantizer.
+    return gx, jnp.zeros(())
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_per_channel(x: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Per-channel fake quantization with on-the-fly max-abs scales (STE)."""
+    s = fit_scale_per_channel(jax.lax.stop_gradient(x), bits, axis=axis)
+    q = jnp.clip(jnp.round(x / s), *qrange(bits))
+    deq = q * s
+    # STE: forward uses deq, gradient flows as identity.
+    return x + jax.lax.stop_gradient(deq - x)
+
+
+def quant_snr_db(x: jax.Array, x_hat: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Signal-to-quantization-noise ratio in dB (accuracy proxy when no
+    labelled dataset is available offline)."""
+    sig = jnp.sum(jnp.square(x))
+    err = jnp.sum(jnp.square(x - x_hat))
+    return 10.0 * jnp.log10((sig + eps) / (err + eps))

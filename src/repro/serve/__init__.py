@@ -1,0 +1,10 @@
+"""Serving substrate: prefill/decode step factories + batched generation."""
+from repro.serve.engine import (
+    ServeState,
+    greedy_generate,
+    make_decode_fn,
+    make_prefill_fn,
+)
+
+__all__ = ["ServeState", "greedy_generate", "make_decode_fn",
+           "make_prefill_fn"]

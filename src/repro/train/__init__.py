@@ -1,0 +1,16 @@
+"""Training substrate: optimizer, loss, train-step factory."""
+from repro.train.optimizer import (
+    AdamWConfig,
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.train.step import TrainState, make_train_step, train_state_axes
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "cosine_schedule",
+    "TrainState", "make_train_step", "train_state_axes",
+]

@@ -1,0 +1,129 @@
+"""Train-step factory: loss, grads, compression, AdamW — one jit-able.
+
+``make_train_step(arch_cfg)`` builds a function
+
+    train_step(state: TrainState, batch: dict) -> (TrainState, metrics)
+
+that works for every model family in the zoo (the batch dict carries
+whatever the family needs: tokens, frames, patch embeddings). The loss
+is next-token cross entropy plus the MoE auxiliary losses.
+
+Optional distributed-optimization features (all jit-safe):
+  * gradient compression with error feedback (int8, cross-pod) —
+    ``compress_grads=True`` threads a residual through TrainState;
+  * remat comes from the model config (scan-level checkpointing);
+  * ZeRO/FSDP sharding falls out of the logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchConfig
+from repro.parallel.compress import (
+    CompressionState,
+    compressed_grad_allreduce,
+    init_compression_state,
+)
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES
+from repro.train.optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    step: jax.Array
+    compress: CompressionState | None = None
+
+
+def init_train_state(params: Any, compress_grads: bool = False) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        step=jnp.zeros((), jnp.int32),
+        compress=init_compression_state(params) if compress_grads else None)
+
+
+def train_state_axes(param_axes: Any) -> TrainState:
+    """Logical-axes tree congruent with TrainState (for shardings)."""
+    scalar = ()
+    return TrainState(
+        params=param_axes,
+        opt=OptState(m=param_axes, v=param_axes, count=scalar),
+        step=scalar,
+        compress=None)
+
+
+def next_token_loss(logits: jax.Array, tokens: jax.Array,
+                    vocab: int | None = None) -> jax.Array:
+    """Mean CE of logits[:, :-1] predicting tokens[:, 1:].
+
+    Sharding-aware formulation (two measured fixes on gemma train_4k):
+      * slicing padded logits[..., :vocab] over a GSPMD-sharded vocab
+        dim all-gathers the FULL fp32 logits (67 GB/step/device) — the
+        caller passes PADDED logits and ``vocab``; padded columns are
+        masked with an elementwise where (shard-local);
+      * ``take_along_axis`` over the sharded vocab also gathers — the
+        one-hot einsum form stays sharded (XLA fuses the iota compare
+        into the reduction; nothing materializes).
+    """
+    lg = logits[:, :-1].astype(jnp.float32)
+    if vocab is not None and vocab < lg.shape[-1]:
+        pad_mask = jnp.arange(lg.shape[-1]) < vocab
+        lg = jnp.where(pad_mask[None, None], lg, -1e30)
+    tgt = tokens[:, 1:]
+    log_z = jax.nn.logsumexp(lg, axis=-1)                 # sharded reduce
+    one_hot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=jnp.float32)
+    correct = jnp.sum(lg * one_hot, axis=-1)              # fused, sharded
+    return jnp.mean(log_z - correct)
+
+
+def make_loss_fn(arch: ArchConfig, rules: AxisRules = DEFAULT_RULES
+                 ) -> Callable:
+    mod = arch.model_module()
+    cfg = arch.model
+
+    def loss_fn(params, batch):
+        if arch.module == "encdec":
+            logits, aux = mod.forward(params, batch["frames"],
+                                      batch["tokens"], cfg, rules,
+                                      slice_vocab=False)
+        else:
+            extra = batch.get("extra_embed")
+            logits, aux = mod.forward(params, batch["tokens"], cfg, rules,
+                                      extra_embed=extra, slice_vocab=False)
+        loss = next_token_loss(logits, batch["tokens"], vocab=cfg.vocab)
+        return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(arch: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    rules: AxisRules = DEFAULT_RULES,
+                    compress_grads: bool = False) -> Callable:
+    loss_fn = make_loss_fn(arch, rules)
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+
+        compress_state = state.compress
+        if compress_grads and compress_state is not None:
+            grads, compress_state = compressed_grad_allreduce(
+                grads, compress_state)
+
+        params, opt, opt_metrics = adamw_update(state.params, grads,
+                                                state.opt, opt_cfg)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        new_state = TrainState(params=params, opt=opt,
+                               step=state.step + 1,
+                               compress=compress_state)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,136 @@
+"""Cost model (Eqs. 3-5) + latency model (Eqs. 6-10) properties.
+
+The paper validates its closed-form latency model against hardware at
+<2% error (Fig. 5); offline we validate the closed form against the
+event-driven instruction simulator — the Fig. 5 reproduction lives in
+benchmarks/paper_fig5.py, these tests pin the agreement bound and the
+structural properties the DSE relies on.
+"""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.cost_model import (
+    bram_cost_dsp_core,
+    bram_cost_lut_core,
+    lut_cost_lut_core,
+    max_lut_core_mn,
+    system_cost,
+)
+from repro.core.latency_model import dsp_core_latency, lut_core_latency
+from repro.core.scheduler import (
+    XC7Z020,
+    XC7Z045,
+    DspCoreConfig,
+    GemmDims,
+    LutCoreConfig,
+    simulate_dsp_core,
+    simulate_lut_core,
+)
+
+
+def test_lut_cost_eq4_exact():
+    # Eq. 4 with the paper's coefficients at a known point
+    assert lut_cost_lut_core(8, 128, 16) == pytest.approx(
+        8 * 16 * (1.17 * 128 + 120.1 + 44.1) + 718)
+
+
+def test_bram_cost_monotone():
+    base = bram_cost_lut_core(8, 128, 16, 1024, 1024)
+    assert bram_cost_lut_core(9, 128, 16, 1024, 1024) >= base
+    assert bram_cost_lut_core(8, 160, 16, 1024, 1024) >= base
+    assert bram_cost_lut_core(8, 128, 16, 2048, 1024) >= base
+
+
+def test_dsp_bram_eq3_structure():
+    # one activation buffer = ceil(R*4/32) BRAM columns
+    v = bram_cost_dsp_core(13, 16, 16, 1024, 1024)
+    assert v == int(np.ceil(13 * 4 / 32)) * (16 * 1 + 8 * 1)
+
+
+def test_system_cost_paper_config_arithmetic():
+    """Eqs. 3-5 on the paper's DA-ResNet-T35ms config (Table 3).
+
+    NOTE: the paper's own Table 4 reports 137 BRAM for this design while
+    Eqs. 3+5 as printed give 176 (> the device's 140) — the published
+    equations and the published utilization are mutually inconsistent.
+    We implement the equations as printed and record the discrepancy in
+    EXPERIMENTS.md §Paper-repro; the DSE projects to feasibility under
+    the equation-based budget, which is the conservative choice.
+    """
+    lut = LutCoreConfig(m=8, n=16, k=128, d_a=1024)
+    dsp = DspCoreConfig(n_reg_row_a=DspCoreConfig.rows_for_device(XC7Z020),
+                        d_a=2048, d_w=1024)
+    rep = system_cost(lut, dsp, XC7Z020)
+    assert rep.lut_core_brams == 4 * (8 * 1 + 16 * 1)       # Eq. 5
+    assert rep.dsp_core_brams == 2 * (16 * 2 + 8 * 1)       # Eq. 3
+    assert rep.luts < XC7Z020.luts                           # LUT fits
+    assert rep.dsps == XC7Z020.dsps
+
+
+def test_max_lut_core_mn_is_tight():
+    for dev in (XC7Z020, XC7Z045):
+        for k in (64, 128, 256):
+            cap = max_lut_core_mn(dev, k)
+            used = lut_cost_lut_core(cap, k, 1) + 1000
+            assert used <= dev.luts
+            over = lut_cost_lut_core(cap + 2, k, 1) + 1000
+            assert over > dev.luts
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(64, 4096), k=st.integers(64, 2048),
+       n=st.integers(16, 512), bw=st.integers(2, 8), ba=st.integers(2, 4))
+def test_closed_form_tracks_simulator_lut(m, k, n, bw, ba):
+    """Fig. 5 property: closed form within a few % of the event sim."""
+    g = GemmDims(m, k, n)
+    cfg = LutCoreConfig(m=8, n=16, k=128)
+    sim = simulate_lut_core(g, cfg, XC7Z020, bw, ba).total_cycles
+    model = float(lut_core_latency(m, k, n, cfg, XC7Z020, bw, ba))
+    assert sim > 0
+    rel = abs(model - sim) / sim
+    # Fig. 5b: prediction error shrinks with workload size
+    bound = 0.10 if sim < 50_000 else 0.03
+    assert rel < bound, (m, k, n, bw, ba, model, sim)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(64, 4096), k=st.integers(64, 2048),
+       n=st.integers(16, 512))
+def test_closed_form_tracks_simulator_dsp(m, k, n):
+    g = GemmDims(m, k, n)
+    cfg = DspCoreConfig(n_reg_row_a=13)
+    sim = simulate_dsp_core(g, cfg, XC7Z020).total_cycles
+    model = float(dsp_core_latency(m, k, n, cfg, XC7Z020))
+    rel = abs(model - sim) / max(sim, 1)
+    bound = 0.10 if sim < 50_000 else 0.03
+    assert rel < bound, (m, k, n, model, sim)
+
+
+def test_lut_latency_proportional_to_bits():
+    """Bit-serial law: in the compute-bound regime latency grows
+    ~linearly with bw * ba (fetch-bound shapes flatten out — that is
+    physical, the fetch engine does not care about planes; a deep
+    activation buffer keeps L resident so compute dominates)."""
+    cfg = LutCoreConfig(m=8, n=16, k=128, d_a=64 * 1024)
+    l22 = float(lut_core_latency(4096, 2048, 512, cfg, XC7Z020, 2, 2))
+    l44 = float(lut_core_latency(4096, 2048, 512, cfg, XC7Z020, 4, 4))
+    l88 = float(lut_core_latency(4096, 2048, 512, cfg, XC7Z020, 8, 8))
+    assert l44 / l22 == pytest.approx(4.0, rel=0.30)
+    assert l88 / l44 == pytest.approx(4.0, rel=0.30)
+
+
+def test_dsp_latency_independent_of_bits():
+    """Bit-parallel law: the DSP core has no bit-width knob at all."""
+    cfg = DspCoreConfig(n_reg_row_a=13)
+    l1 = float(dsp_core_latency(1024, 512, 256, cfg, XC7Z020))
+    l2 = float(dsp_core_latency(1024, 512, 256, cfg, XC7Z020))
+    assert l1 == l2
+
+
+def test_zero_work_zero_latency():
+    cfg = LutCoreConfig(m=8, n=16, k=128)
+    assert float(lut_core_latency(1024, 512, 0, cfg, XC7Z020, 4, 4)) == 0.0
+    dcfg = DspCoreConfig(n_reg_row_a=13)
+    assert float(dsp_core_latency(1024, 512, 0, dcfg, XC7Z020)) == 0.0

@@ -1,0 +1,48 @@
+"""Dry-run machinery unit tests (no 512-device mesh needed)."""
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.launch.dryrun import _reduced_model, collective_bytes
+from repro.launch.mesh import make_host_mesh
+
+
+def test_reduced_model_trip_counts():
+    for arch_id, want_real in [("qwen3-8b", 36), ("deepseek-v2-236b", 59),
+                               ("jamba-v0.1-52b", 4), ("mamba2-780m", 48),
+                               ("seamless-m4t-large-v2", 24)]:
+        arch = configs.get(arch_id)
+        small, real, small_trips = _reduced_model(arch)
+        assert real == want_real, (arch_id, real)
+        assert small_trips == 2
+        assert small.model.scan_unroll is True
+
+
+def test_two_point_fit_algebra():
+    """total = F1 + (L-1)(F2-F1) is exact for homogeneous stacks."""
+    c_body, c_out, L = 7.0, 3.0, 36
+    f1 = c_body + c_out                 # scanned: body counted once
+    f2 = 2 * c_body + c_out             # 2-layer unrolled
+    fitted = f1 + (L - 1) * (f2 - f1)
+    assert fitted == pytest.approx(L * c_body + c_out)
+
+
+def test_collective_parser_variants():
+    hlo = """
+  %a = bf16[8,4]{1,0} all-gather(%x)
+  %b = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%y, %z)
+  %c = f32[4]{0} all-reduce-start(%w)
+  %d = f32[4]{0} all-reduce-done(%c)
+  %e = u8[100]{0} collective-permute(%v)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 8 * 4 * 2
+    assert got["all-to-all"] == 2 * 2 * 2 * 4
+    assert got["all-reduce"] == 16            # -done skipped
+    assert got["collective-permute"] == 100
+
+
+def test_make_host_mesh_shape():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.size >= 1

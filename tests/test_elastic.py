@@ -1,0 +1,42 @@
+"""Elastic scaling: checkpoint written under a 4-device mesh restores
+onto a 2-device mesh with different shardings (subprocess: forced host
+devices, like the dry-run)."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+
+tmp = tempfile.mkdtemp()
+mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+mesh2 = jax.make_mesh((1, 2), ("data", "model"))
+
+state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+         "step": jnp.int32(5)}
+sh4 = {"w": NamedSharding(mesh4, P("data", "model")),
+       "step": NamedSharding(mesh4, P())}
+state4 = jax.tree.map(jax.device_put, state, sh4)
+
+mgr = CheckpointManager(tmp)
+mgr.save(5, state4, blocking=True)
+
+# restore onto the *smaller* mesh with a different layout
+sh2 = {"w": NamedSharding(mesh2, P(None, "model")),
+       "step": NamedSharding(mesh2, P())}
+got = mgr.restore(state, shardings=sh2)
+np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(state["w"]))
+assert got["w"].sharding == sh2["w"]
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_mesh_rescale():
+    res = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "ELASTIC_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,116 @@
+"""HeteroLinear: fp / QAT / deployed-integer agreement + CNN smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hetero_linear import (
+    HeteroLinearConfig,
+    apply_deploy,
+    apply_fp,
+    apply_qat,
+    column_allocation,
+    deploy,
+    init_hetero_linear,
+)
+from repro.models import cnn
+from repro.quant.hybrid import LayerQuantConfig
+
+
+def _cfg(ratio=0.4, bits=8, a_bits=8):
+    return HeteroLinearConfig(
+        64, 48, LayerQuantConfig(w_bits_lut=bits, a_bits=a_bits,
+                                 ratio=ratio))
+
+
+def test_deploy_matches_qat_bit_exactly():
+    cfg = _cfg()
+    p = init_hetero_linear(jax.random.key(0), cfg)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (10, 64))
+    y_qat = apply_qat(p, x, cfg)
+    y_dep = apply_deploy(deploy(p, cfg), x)
+    rel = float(jnp.abs(y_dep - y_qat).max() / jnp.abs(y_qat).max())
+    assert rel < 1e-4, rel
+
+
+@pytest.mark.parametrize("ratio", [0.0, 0.25, 0.75, 1.0])
+def test_deploy_all_ratios(ratio):
+    cfg = _cfg(ratio=ratio)
+    p = init_hetero_linear(jax.random.key(2), cfg)
+    x = 0.5 * jax.random.normal(jax.random.key(3), (6, 64))
+    y = apply_deploy(deploy(p, cfg), x)
+    assert y.shape == (6, 48)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_higher_bits_closer_to_fp():
+    errs = []
+    for bits in (2, 4, 8):
+        cfg = _cfg(ratio=1.0, bits=bits)      # everything on flex path
+        p = init_hetero_linear(jax.random.key(4), cfg)
+        x = 0.5 * jax.random.normal(jax.random.key(5), (20, 64))
+        y_fp = apply_fp(p, x)
+        y = apply_deploy(deploy(p, cfg), x)
+        errs.append(float(jnp.abs(y - y_fp).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_column_allocation_is_permutation():
+    cfg = _cfg()
+    p = init_hetero_linear(jax.random.key(6), cfg)
+    perm = np.asarray(column_allocation(p["w"], cfg))
+    assert sorted(perm.tolist()) == list(range(48))
+
+
+def test_qat_gradients_flow():
+    cfg = _cfg()
+    p = init_hetero_linear(jax.random.key(7), cfg)
+    x = jax.random.normal(jax.random.key(8), (4, 64))
+    g = jax.grad(lambda p: apply_qat(p, x, cfg).sum())(p)
+    assert float(jnp.abs(g["w"]).sum()) > 0
+    assert bool(jnp.isfinite(g["w"]).all())
+
+
+# ---------------------------------------------------------------------------
+# CNN workloads (the paper's networks) under hybrid quantization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["resnet18", "mobilenet_v2"])
+def test_cnn_quantized_smoke(arch):
+    cfg = cnn.reduced_config(arch)
+    specs = cnn.specs_for(cfg)
+    p = cnn.init(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    qcfgs = [LayerQuantConfig(w_bits_lut=6, a_bits=4, ratio=0.5)
+             for _ in specs]
+    y = cnn.forward(p, x, cfg, qcfgs)
+    assert y.shape == (2, 10)
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_cnn_qat_improves_on_synthetic():
+    """A few QAT steps on separable synthetic data reduce the loss."""
+    from repro.data.synthetic import SyntheticImages
+    cfg = cnn.reduced_config("resnet18")
+    specs = cnn.specs_for(cfg)
+    qcfgs = [LayerQuantConfig(w_bits_lut=8, a_bits=8, ratio=0.5)
+             for _ in specs]
+    p = cnn.init(cfg, jax.random.key(0))
+    data = SyntheticImages(10, 16, 32, seed=0)
+
+    @jax.jit
+    def step(p, images, labels):
+        def loss(p):
+            return cnn.cross_entropy(cnn.forward(p, images, cfg, qcfgs),
+                                     labels)
+        l, g = jax.value_and_grad(loss)(p)
+        p = jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g)
+        return p, l
+
+    batch = data.next_batch()
+    losses = []
+    for _ in range(6):
+        p, l = step(p, batch["images"], batch["labels"])
+        losses.append(float(l))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,59 @@
+"""ISA encode/decode round-trip — bit-exact property tests."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import isa
+
+
+def _field(bits):
+    return st.integers(0, (1 << bits) - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(core=st.sampled_from(list(isa.CoreSel)), onchip=_field(16),
+       stage=_field(3), rng=_field(1), base=_field(32), off=_field(24),
+       length=_field(16), is_result=st.booleans())
+def test_fetch_result_roundtrip(core, onchip, stage, rng, base, off,
+                                length, is_result):
+    cls = isa.ResultInstr if is_result else isa.FetchInstr
+    instr = cls(core=core, onchip_base=onchip, stage_ctrl=stage,
+                onchip_range=rng, ddr_base=base, ddr_offset=off,
+                ddr_range=length)
+    word = instr.encode()
+    assert 0 <= word < (1 << isa.WORD_BITS)
+    assert isa.decode(word) == instr
+
+
+@settings(max_examples=200, deadline=None)
+@given(core=st.sampled_from(list(isa.CoreSel)), a=_field(16), w=_field(16),
+       m=_field(12), k=_field(16), n=_field(12), bw=_field(4), ba=_field(4),
+       acc=_field(1))
+def test_execute_roundtrip(core, a, w, m, k, n, bw, ba, acc):
+    instr = isa.ExecuteInstr(core=core, buf_addr_a=a, buf_addr_w=w,
+                             tile_m=m, tile_k=k, tile_n=n, bits_w=bw,
+                             bits_a=ba, accumulate=acc)
+    assert isa.decode(instr.encode()) == instr
+
+
+@settings(max_examples=100, deadline=None)
+@given(core=st.sampled_from(list(isa.CoreSel)),
+       src=st.sampled_from(list(isa.Engine)),
+       dst=st.sampled_from(list(isa.Engine)),
+       cur=_field(1), nxt=_field(2), flag=_field(3), wait=_field(1))
+def test_sync_roundtrip(core, src, dst, cur, nxt, flag, wait):
+    instr = isa.SyncInstr(core=core, src_engine=src, dst_engine=dst,
+                          cur_state=cur, next_state=nxt, token_flag=flag,
+                          is_wait=wait)
+    assert isa.decode(instr.encode()) == instr
+
+
+def test_field_overflow_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        isa.FetchInstr(isa.CoreSel.LUT, 1 << 16, 0, 0, 0, 0, 0).encode()
+
+
+def test_distinct_instructions_distinct_words():
+    a = isa.ExecuteInstr(isa.CoreSel.LUT, 0, 0, 1, 1, 1, 2, 2, 0).encode()
+    b = isa.ExecuteInstr(isa.CoreSel.DSP, 0, 0, 1, 1, 1, 2, 2, 0).encode()
+    assert a != b

@@ -1,0 +1,226 @@
+"""Model-zoo behavioral tests: decode == forward, SSD == recurrence,
+hetero-quant forward trains."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import encdec, hybrid, layers as L, lm, ssm
+from repro.kernels.ref import flash_attention_ref
+
+
+def _dense_cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                head_dim=16, d_ff=128, vocab=300, vocab_pad_multiple=16,
+                param_dtype=jnp.float32)
+    base.update(kw)
+    return lm.LMConfig(**base)
+
+
+def test_blockwise_attention_matches_oracle():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 80, 8, 32)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 80, 2, 32)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 80, 2, 32)), jnp.float32)
+    out = L.blockwise_attention(q, k, v, causal=True, q_chunk=32,
+                                kv_chunk=32)
+    kr = jnp.repeat(k, 4, axis=2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, 4, axis=2).transpose(0, 2, 1, 3)
+    want = flash_attention_ref(q.transpose(0, 2, 1, 3), kr, vr,
+                               causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("qk_norm", [False, True])
+def test_lm_decode_matches_forward(qk_norm):
+    cfg = _dense_cfg(qk_norm=qk_norm)
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 300)
+    logits, _ = lm.forward(p, toks, cfg)
+    cache = lm.init_cache(cfg, 2, 24, jnp.float32)
+    dec = []
+    for t in range(8):
+        lg, cache = lm.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :8]).max())
+    assert err < 2e-3, err
+
+
+def test_lm_prefill_then_decode_matches_forward():
+    cfg = _dense_cfg()
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 300)
+    logits, _ = lm.forward(p, toks, cfg)
+    cache = lm.init_cache(cfg, 2, 24, jnp.float32)
+    lg, cache = lm.prefill(p, toks[:, :8], cache, cfg)
+    assert float(jnp.abs(lg - logits[:, :8]).max()) < 2e-3
+    lg2, cache = lm.decode_step(p, toks[:, 8:9], cache, 8, cfg)
+    assert float(jnp.abs(lg2 - logits[:, 8]).max()) < 2e-3
+
+
+def test_mla_decode_matches_forward():
+    cfg = _dense_cfg(n_kv_heads=4,
+                     mla=lm.MLAConfig(kv_lora=32, q_lora=48, qk_nope_dim=16,
+                                      qk_rope_dim=8, v_dim=16))
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 300)
+    logits, _ = lm.forward(p, toks, cfg)
+    cache = lm.init_cache(cfg, 2, 16, jnp.float32)
+    dec = []
+    for t in range(6):
+        lg, cache = lm.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :6]).max())
+    assert err < 2e-2, err
+
+
+def test_moe_decode_matches_forward_high_capacity():
+    cfg = _dense_cfg(moe=L.MoEConfig(n_experts=8, top_k=2, d_ff=96,
+                                     n_shared=1, group_size=64,
+                                     capacity_factor=8.0))
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 300)
+    logits, aux = lm.forward(p, toks, cfg)
+    assert float(aux) > 0.0                      # balance loss is live
+    cache = lm.init_cache(cfg, 2, 16, jnp.float32)
+    dec = []
+    for t in range(6):
+        lg, cache = lm.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :6]).max())
+    assert err < 2e-2, err
+
+
+def test_ssd_chunked_equals_stepwise():
+    rng = np.random.default_rng(0)
+    B, S, H, P, G, N = 2, 40, 4, 8, 2, 16
+    cfg = ssm.SSMConfig(d_model=32, d_inner=H * P, head_dim=P, d_state=N,
+                        n_groups=G, chunk=16)
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, H), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, G, N)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((B, S, G, N)) * 0.3, jnp.float32)
+    y, fin = ssm.ssd_chunked(x, dt, a, b, c, cfg)
+    st = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        yt, st = ssm.ssd_step(x[:, t], dt[:, t], a, b[:, t], c[:, t], st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(st), atol=1e-4)
+
+
+def test_ssm_lm_decode_matches_forward():
+    cfg = ssm.SSMLMConfig(
+        "t", n_layers=2, d_model=32, vocab=120, vocab_pad_multiple=8,
+        ssm=ssm.SSMConfig(d_model=32, d_inner=64, head_dim=16, d_state=16,
+                          chunk=16),
+        param_dtype=jnp.float32)
+    p = ssm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 120)
+    logits, _ = ssm.forward(p, toks, cfg)
+    cache = ssm.init_cache(cfg, 2, dtype=jnp.float32)
+    dec = []
+    for t in range(8):
+        lg, cache = ssm.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :8]).max())
+    assert err < 1e-3, err
+
+
+def test_hybrid_decode_matches_forward():
+    cfg = hybrid.HybridConfig(
+        "t", n_layers=8, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
+        d_ff=96, vocab=130, vocab_pad_multiple=8,
+        ssm=ssm.SSMConfig(d_model=48, d_inner=96, head_dim=16, d_state=16,
+                          chunk=16),
+        moe=L.MoEConfig(n_experts=4, top_k=2, d_ff=64, group_size=32,
+                        capacity_factor=8.0),
+        param_dtype=jnp.float32)
+    p = hybrid.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 130)
+    logits, _ = hybrid.forward(p, toks, cfg)
+    cache = hybrid.init_cache(cfg, 2, 16, jnp.float32)
+    dec = []
+    for t in range(6):
+        lg, cache = hybrid.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :6]).max())
+    assert err < 2e-3, err
+
+
+def test_encdec_decode_matches_forward():
+    cfg = encdec.EncDecConfig(
+        "t", n_enc_layers=2, n_dec_layers=2, d_model=48, n_heads=4,
+        n_kv_heads=2, head_dim=12, d_ff=96, vocab=130,
+        vocab_pad_multiple=8, param_dtype=jnp.float32)
+    p = encdec.init(cfg, jax.random.key(0))
+    frames = 0.5 * jax.random.normal(jax.random.key(1), (2, 20, 48))
+    toks = jax.random.randint(jax.random.key(2), (2, 12), 0, 130)
+    logits, _ = encdec.forward(p, frames, toks, cfg)
+    memory = encdec.encode(p, frames, cfg)
+    cache = encdec.init_cache(cfg, 2, 16, 20, jnp.float32)
+    cache = encdec.build_cross_cache(p, memory, cfg, cache, jnp.float32)
+    dec = []
+    for t in range(6):
+        lg, cache = encdec.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lg)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, :6]).max())
+    assert err < 2e-3, err
+
+
+def test_mrope_reduces_to_rope_for_text():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 10, 4, 64)), jnp.float32)
+    pos = jnp.arange(10)[None].repeat(2, 0)
+    a = L.apply_rope(x, pos)
+    b = L.apply_mrope(x, jnp.stack([pos] * 3), (16, 8, 8))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_hetero_quant_lm_trains():
+    cfg = _dense_cfg(hetero_quant=lm.HeteroQuantConfig(w_bits_lut=8,
+                                                       a_bits=8, ratio=0.5))
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 300)
+
+    def loss(p):
+        lg, aux = lm.forward(p, toks, cfg)
+        return jnp.mean((lg[:, :-1] - jax.nn.one_hot(toks[:, 1:], 300)) ** 2)
+
+    g = jax.grad(loss)(p)
+    norms = [float(jnp.abs(x).sum()) for x in jax.tree.leaves(g)]
+    assert all(np.isfinite(norms)) and sum(norms) > 0
+
+
+def test_cache_write_semantics():
+    cache = jnp.zeros((2, 6, 3))
+    new = jnp.ones((2, 1, 3))
+    out = L.cache_write(cache, new, 4)
+    assert float(out[:, 4].min()) == 1.0
+    assert float(out.sum()) == 2 * 3
+    # full-length write replaces
+    full = L.cache_write(cache, 2 * jnp.ones((2, 6, 3)), 0)
+    assert float(full.min()) == 2.0
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """Q2 optimization: int8 KV cache (per-head prefill-calibrated
+    scales) tracks the fp forward within quantization noise."""
+    cfg = _dense_cfg(kv_cache_quant=True)
+    p = lm.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 24), 0, 300)
+    logits, _ = lm.forward(p, toks, cfg)
+    cache = lm.init_cache(cfg, 2, 32, jnp.float32)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    lg, cache = lm.prefill(p, toks[:, :8], cache, cfg)
+    dec = []
+    for t in range(8, 12):
+        lgt, cache = lm.decode_step(p, toks[:, t:t + 1], cache, t, cfg)
+        dec.append(lgt)
+    err = float(jnp.abs(jnp.stack(dec, 1) - logits[:, 8:12]).max())
+    rel = err / float(jnp.abs(logits[:, 8:12]).max())
+    assert rel < 0.06, rel

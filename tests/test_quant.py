@@ -1,0 +1,117 @@
+"""Quantizer (Eq. 2) + hybrid filter-wise scheme (§4) properties."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.quant.hybrid import (
+    LayerQuantConfig,
+    hybrid_fake_quant_weight,
+    hybrid_quantize_weight,
+    kl_filter_allocation,
+)
+from repro.quant.uniform import (
+    dequantize,
+    fake_quant_per_channel,
+    fit_scale,
+    qrange,
+    quant_snr_db,
+    quantize,
+)
+
+finite = st.floats(-100.0, 100.0, allow_nan=False, width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                 max_side=16),
+                    elements=finite),
+       bits=st.integers(2, 8))
+def test_codes_in_range(x, bits):
+    s = fit_scale(jnp.asarray(x), bits)
+    q = quantize(jnp.asarray(x), s, bits)
+    lo, hi = qrange(bits)
+    assert int(q.min()) >= lo and int(q.max()) <= hi
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=hnp.arrays(np.float32, (8, 8), elements=finite),
+       bits=st.integers(2, 8))
+def test_quantization_error_bounded(x, bits):
+    """|x - dq(q(x))| <= s/2 inside the clip range."""
+    xj = jnp.asarray(x)
+    s = fit_scale(xj, bits)
+    deq = dequantize(quantize(xj, s, bits), s)
+    err = np.abs(np.asarray(deq) - x)
+    assert (err <= float(s) / 2 + 1e-6).all()
+
+
+def test_more_bits_higher_snr():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
+                    jnp.float32)
+    snrs = []
+    for bits in (2, 4, 6, 8):
+        s = fit_scale(x, bits)
+        deq = dequantize(quantize(x, s, bits), s)
+        snrs.append(float(quant_snr_db(x, deq)))
+    assert snrs == sorted(snrs)
+    assert snrs[-1] - snrs[0] > 20.0       # ~6 dB/bit
+
+
+def test_ste_gradient_identity_in_range():
+    x = jnp.linspace(-0.5, 0.5, 11)
+    g = jax.grad(lambda v: fake_quant_per_channel(v[None], 8)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(11), atol=1e-6)
+
+
+def test_hybrid_roundtrip_preserves_order():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((32, 9)), jnp.float32)
+    cfg = LayerQuantConfig(w_bits_lut=8, a_bits=4, ratio=0.5)
+    hq = hybrid_quantize_weight(w, cfg)
+    deq = hq.dequantize()
+    assert deq.shape == w.shape
+    # 8-bit lut + 4-bit dsp: everything within the coarser (4-bit) step
+    assert float(jnp.abs(deq - w).max()) < float(jnp.abs(w).max()) / 7
+
+
+def test_kl_allocation_is_valid_permutation():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    cfg = LayerQuantConfig(w_bits_lut=8, a_bits=4, ratio=0.5)
+    perm = np.asarray(kl_filter_allocation(w, cfg))
+    assert sorted(perm.tolist()) == list(range(32))
+
+
+def test_mse_allocation_routes_damaged_filters_to_high_bits():
+    """Beyond-paper "mse" metric: filters with the worst quantization
+    damage land on the flexible (high-bit) core."""
+    rng = np.random.default_rng(2)
+    # outlier-laden filters (crushed by max-abs int4) vs benign gaussians
+    hostile = rng.standard_normal((16, 256)) * 0.05
+    hostile[:, 0] = 4.0                          # one huge outlier each
+    benign = rng.standard_normal((16, 256))
+    w = jnp.asarray(np.concatenate([hostile, benign]), jnp.float32)
+    cfg = LayerQuantConfig(w_bits_lut=8, a_bits=4, ratio=0.5,
+                           alloc_metric="mse")
+    perm = np.asarray(kl_filter_allocation(w, cfg))
+    lut_half = set(perm[:16].tolist())
+    assert len(lut_half & set(range(16))) >= 14
+
+
+def test_hybrid_fake_quant_grad_finite():
+    w = jnp.asarray(np.random.default_rng(3).standard_normal((16, 8)),
+                    jnp.float32)
+    cfg = LayerQuantConfig(w_bits_lut=6, a_bits=4, ratio=0.4)
+    g = jax.grad(lambda w: hybrid_fake_quant_weight(w, cfg).sum())(w)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_bad_config_rejected():
+    with pytest.raises(ValueError):
+        LayerQuantConfig(ratio=1.5)
+    with pytest.raises(ValueError):
+        LayerQuantConfig(w_bits_lut=9)

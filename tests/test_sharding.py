@@ -1,0 +1,83 @@
+"""Sharding-rule invariants (no multi-device mesh needed: 1x1)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    AxisRules,
+    logical_to_spec,
+    zero1_spec,
+)
+
+
+def _mesh(shape, axes):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+MESH = _mesh((4, 2), ("data", "model"))
+
+
+def test_basic_mapping():
+    spec = logical_to_spec(("batch", None, "mlp"), MESH, DEFAULT_RULES,
+                           shape=(8, 3, 16))
+    assert spec == P("data", None, "model")
+
+
+def test_divisibility_fallback():
+    # 6 % 4 != 0 -> batch dim replicated
+    spec = logical_to_spec(("batch", "mlp"), MESH, DEFAULT_RULES,
+                           shape=(6, 16))
+    assert spec == P(None, "model")
+
+
+def test_mesh_axis_used_once():
+    # both dims want "model": the first wins, second replicates
+    spec = logical_to_spec(("mlp", "heads"), MESH, DEFAULT_RULES,
+                           shape=(16, 16))
+    assert spec == P("model")
+
+
+def test_missing_mesh_axes_dropped():
+    mesh1d = _mesh((2,), ("model",))
+    spec = logical_to_spec(("batch", "mlp"), mesh1d, DEFAULT_RULES,
+                           shape=(8, 16))
+    assert spec == P(None, "model")     # no "data"/"pod" on this mesh
+
+
+def test_rule_overrides():
+    rules = DEFAULT_RULES.replace(act_heads=(), act_seq_attn=("model",))
+    spec = logical_to_spec(("batch", "act_seq_attn", "act_heads", None),
+                           MESH, rules, shape=(8, 16, 7, 4))
+    assert spec == P("data", "model")
+
+
+def test_multi_axis_dim():
+    mesh3 = _mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = logical_to_spec(("batch", None), mesh3, DEFAULT_RULES,
+                           shape=(8, 3))
+    assert spec == P(("pod", "data"))
+
+
+def test_partial_multi_axis_fallback():
+    mesh3 = _mesh((2, 2, 2), ("pod", "data", "model"))
+    # 2 divides by pod(2) but not pod*data(4): trailing axis dropped
+    spec = logical_to_spec(("batch",), mesh3, DEFAULT_RULES, shape=(2,))
+    assert spec == P("pod")
+
+
+def test_zero1_spec_shards_replicated_dim():
+    spec = zero1_spec(P(None, "model"), (8, 16), MESH)
+    assert spec == P("data", "model")
+    # already data-sharded -> unchanged
+    spec2 = zero1_spec(P("data", None), (8, 16), MESH)
+    assert spec2 == P("data", None)
+
+
+def test_embed_rule_is_fsdp():
+    """Weight embed dims shard over data (ZeRO-3 profile)."""
+    spec = logical_to_spec(("embed", "mlp"), MESH, DEFAULT_RULES,
+                           shape=(64, 32))
+    assert spec == P("data", "model")

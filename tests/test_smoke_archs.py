@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned architecture instantiates a REDUCED same-family config
+and runs one forward + one train step on CPU, asserting output shapes
+and the absence of NaNs. The FULL configs are exercised only by the
+dry-run (launch/dryrun.py — ShapeDtypeStruct, no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data.synthetic import make_host_batch
+from repro.train.step import init_train_state, make_train_step
+
+ARCHS = configs.list_archs()
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_forward(arch_id):
+    arch = configs.get(arch_id)
+    smoke = dataclasses.replace(arch, model=arch.smoke)
+    mod = smoke.model_module()
+    params = mod.init(smoke.model, jax.random.key(0))
+    batch = make_host_batch(arch, batch=2, seq=24)
+    if arch.module == "encdec":
+        logits, aux = mod.forward(params, batch["frames"], batch["tokens"],
+                                  smoke.model)
+    else:
+        logits, aux = mod.forward(params, batch["tokens"], smoke.model,
+                                  extra_embed=batch.get("extra_embed"))
+    assert logits.shape == (2, 24, smoke.model.vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch_id}: NaN logits"
+    assert jnp.isfinite(jnp.asarray(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_train_step(arch_id):
+    arch = configs.get(arch_id)
+    smoke = dataclasses.replace(arch, model=arch.smoke)
+    mod = smoke.model_module()
+    params = mod.init(smoke.model, jax.random.key(0))
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(smoke))
+    batch = make_host_batch(arch, batch=2, seq=24)
+    state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch_id}: non-finite loss"
+    assert jnp.isfinite(metrics["grad_norm"])
+    assert int(state.step) == 1
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_smoke_decode_step(arch_id):
+    arch = configs.get(arch_id)
+    smoke = dataclasses.replace(arch, model=arch.smoke)
+    mod = smoke.model_module()
+    params = mod.init(smoke.model, jax.random.key(0))
+    if arch.module == "ssm":
+        cache = mod.init_cache(smoke.model, 2, dtype=jnp.float32)
+    elif arch.module == "encdec":
+        frames = 0.1 * jax.random.normal(jax.random.key(1),
+                                         (2, 16, smoke.model.d_model))
+        memory = mod.encode(params, frames, smoke.model)
+        cache = mod.init_cache(smoke.model, 2, 16, 16, jnp.float32)
+        cache = mod.build_cross_cache(params, memory, smoke.model, cache,
+                                      jnp.float32)
+    else:
+        cache = mod.init_cache(smoke.model, 2, 16, jnp.float32)
+    token = jnp.zeros((2, 1), jnp.int32)
+    logits, cache2 = mod.decode_step(params, token, cache, 0, smoke.model)
+    assert logits.shape == (2, smoke.model.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    expected = {"jamba-v0.1-52b", "seamless-m4t-large-v2", "yi-34b",
+                "gemma-7b", "llama3.2-1b", "qwen3-8b", "mamba2-780m",
+                "qwen3-moe-235b-a22b", "deepseek-v2-236b", "qwen2-vl-2b"}
+    assert set(ARCHS) == expected
+
+
+def test_published_param_counts():
+    """Full configs match the published model sizes (sanity of the
+    config transcription; +-10%)."""
+    expected = {
+        "deepseek-v2-236b": 236e9, "qwen3-moe-235b-a22b": 235e9,
+        "jamba-v0.1-52b": 52e9, "yi-34b": 34.4e9, "gemma-7b": 8.5e9,
+        "qwen3-8b": 8.2e9, "llama3.2-1b": 1.24e9, "mamba2-780m": 0.78e9,
+        "qwen2-vl-2b": 1.5e9, "seamless-m4t-large-v2": 2.0e9,
+    }
+    for arch_id, want in expected.items():
+        arch = configs.get(arch_id)
+        n = arch.model_module().param_count(arch.model)
+        assert abs(n - want) / want < 0.10, (arch_id, n, want)

@@ -1,0 +1,53 @@
+"""Eq. 12 split solver: exactness vs brute force + Fig. 7 structure."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.scheduler import XC7Z020, DspCoreConfig, LutCoreConfig
+from repro.core.split import brute_force_split, solve_split
+from repro.core.workloads import ConvSpec, resnet18_specs
+
+LUT = LutCoreConfig(m=8, n=16, k=128)
+DSP = DspCoreConfig(n_reg_row_a=13)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c_in=st.integers(16, 256), c_out=st.integers(16, 256),
+       hw=st.sampled_from([7, 14, 28]), kernel=st.sampled_from([1, 3]),
+       bw=st.integers(2, 8), ba=st.integers(2, 4))
+def test_vectorized_matches_bruteforce(c_in, c_out, hw, kernel, bw, ba):
+    spec = ConvSpec("t", c_in, c_out, kernel, 1, hw)
+    fast = solve_split(spec, LUT, DSP, XC7Z020, bw, ba)
+    slow = brute_force_split(spec, LUT, DSP, XC7Z020, bw, ba)
+    assert fast.cycles == slow.cycles
+    assert fast.n_lut == slow.n_lut
+
+
+def test_split_beats_either_extreme():
+    """Fig. 7: the makespan-optimal split beats pure-LUT and pure-DSP."""
+    spec = resnet18_specs()[13]            # a middle conv layer
+    sol = solve_split(spec, LUT, DSP, XC7Z020, 4, 4, keep_curve=True)
+    curve = sol.curve
+    assert sol.cycles <= curve[0]          # all-DSP (n_lut = 0)
+    assert sol.cycles <= curve[-1]         # all-LUT
+    assert 0 < sol.n_lut < spec.gemm().n   # interior optimum
+
+
+def test_split_curve_is_max_of_monotone_pieces():
+    spec = resnet18_specs()[10]
+    sol = solve_split(spec, LUT, DSP, XC7Z020, 4, 4, keep_curve=True)
+    best = int(sol.n_lut)
+    curve = sol.curve
+    # left of the optimum the DSP side dominates (nonincreasing);
+    # right of it the LUT side dominates (nondecreasing)
+    assert all(curve[i] >= curve[i + 1] - 1e-9 for i in range(best))
+    assert all(curve[i] <= curve[i + 1] + 1e-9
+               for i in range(best, len(curve) - 1))
+
+
+def test_ratio_moves_with_lut_bits():
+    """More LUT-path bits -> slower LUT core -> fewer filters routed
+    to it (the §6.2.2 behavior the agent exploits)."""
+    spec = resnet18_specs()[10]
+    lo = solve_split(spec, LUT, DSP, XC7Z020, 2, 2)
+    hi = solve_split(spec, LUT, DSP, XC7Z020, 8, 4)
+    assert hi.n_lut <= lo.n_lut

@@ -1,0 +1,184 @@
+"""Optimizer, gradient compression, checkpointing, watchdog, serving."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, StepWatchdog
+from repro.parallel.compress import (
+    compress_int8,
+    compressed_grad_allreduce,
+    decompress_int8,
+    init_compression_state,
+)
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    w = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    opt = adamw_init(w)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        w, opt, _ = adamw_update(w, g, opt, cfg)
+    assert float(loss(w)) < 0.05 * l0
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    got = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert got == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_roundtrip_error_bounded():
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
+                    jnp.float32)
+    codes, scale = compress_int8(g)
+    err = jnp.abs(decompress_int8(codes, scale) - g)
+    assert float(err.max()) <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_accumulates_to_zero_bias():
+    """EF property: sum of (decompressed) over steps -> sum of true
+    grads (the residual carries what was lost)."""
+    rng = np.random.default_rng(1)
+    grads = [jnp.asarray(rng.standard_normal(64) * 1e-3, jnp.float32)
+             for _ in range(32)]
+    state = init_compression_state({"g": grads[0]})
+    sent_total = jnp.zeros(64)
+    true_total = jnp.zeros(64)
+    for g in grads:
+        out, state = compressed_grad_allreduce({"g": g}, state)
+        sent_total = sent_total + out["g"]
+        true_total = true_total + g
+    resid = jax.tree.leaves(state.residual)[0]
+    np.testing.assert_allclose(np.asarray(sent_total + resid),
+                               np.asarray(true_total), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"layers": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+    state = _tree()
+    mgr.save(3, state, blocking=True)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    got = mgr.restore(like)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A stale tmp dir (simulated crash mid-write) is invisible to
+    restore and GC'd by the next manager."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    fake = tmp_path / "step_0000000002.tmp-deadbeef"
+    fake.mkdir()
+    (fake / "manifest.json").write_text("{corrupt")
+    assert mgr.latest_step() == 1          # tmp dir ignored
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert not fake.exists()               # GC'd on construction
+    assert mgr2.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    bad = _tree()
+    bad["layers"]["w"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_checkpoint_elastic_restore_new_sharding(tmp_path):
+    """Stored arrays are mesh-agnostic: restore onto explicit (here
+    single-device) shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mgr = CheckpointManager(str(tmp_path))
+    state = _tree()
+    mgr.save(5, state, blocking=True)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, PartitionSpec()), state)
+    got = mgr.restore(state, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["layers"]["w"]),
+                                  np.asarray(state["layers"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_flags_straggler(tmp_path):
+    hb = str(tmp_path / "hb.json")
+    dog = StepWatchdog(heartbeat_path=hb, threshold=5.0)
+    for s in range(6):
+        dog.start_step(s)
+        time.sleep(0.01)
+        assert not dog.end_step()
+    dog.start_step(6)
+    time.sleep(0.2)                        # 20x the median
+    assert dog.end_step()
+    assert dog.stragglers == [6]
+    age = StepWatchdog.heartbeat_age(hb)
+    assert age is not None and age < 5.0
+
+
+def test_heartbeat_age_missing():
+    assert StepWatchdog.heartbeat_age("/nonexistent/hb.json") is None
