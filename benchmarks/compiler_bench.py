@@ -1,0 +1,63 @@
+"""Compiler throughput benchmark: compile wall-time, instruction count,
+bytes moved and DDR footprint per network.
+
+Covers both CNN workloads and a slice of the LM registry, so compile
+cost is tracked for every frontend family. Each row's ``derived`` field
+carries a ``BENCH`` JSON blob with the program-level metrics the
+roadmap cares about (instruction mix, image size, traffic).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import sys
+import time
+
+from repro.compiler import compile_network, to_binary
+
+NETWORKS = [
+    ("resnet18", {}),
+    ("mobilenet_v2", {}),
+    ("llama3.2-1b", {"seq_len": 64}),
+    ("qwen3-moe-235b-a22b", {"seq_len": 64}),
+    ("mamba2-780m", {"seq_len": 64}),
+]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for name, kw in NETWORKS:
+        t0 = time.time()
+        prog = compile_network(name, **kw)
+        compile_s = time.time() - t0
+        t1 = time.time()
+        image = to_binary(prog)
+        pack_s = time.time() - t1
+        s = prog.stats()
+        bench = {
+            "BENCH": "compiler",
+            "network": name,
+            "layers": len(prog.layers),
+            "instructions": s.n_instructions,
+            "by_opcode": s.by_opcode,
+            "image_bytes": len(image),
+            "ddr_footprint_bytes": s.ddr_footprint,
+            "mb_fetched": round(s.bytes_fetched / 1e6, 3),
+            "mb_written": round(s.bytes_written / 1e6, 3),
+            "compile_s": round(compile_s, 4),
+            "pack_s": round(pack_s, 4),
+            "instrs_per_s": int(s.n_instructions / max(compile_s, 1e-9)),
+        }
+        rows.append((f"compiler.{name}", 1e6 * compile_s,
+                     json.dumps(bench, sort_keys=True)))
+    return rows
+
+
+def main() -> list[tuple[str, float, str]]:
+    return run()
+
+
+if __name__ == "__main__":
+    writer = csv.writer(sys.stdout)
+    for row in main():
+        writer.writerow(row)

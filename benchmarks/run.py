@@ -7,6 +7,7 @@ dry-run roofline summary. Prints ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
 import argparse
+import csv
 import sys
 import traceback
 
@@ -17,8 +18,15 @@ def main() -> None:
                     help="skip the RL search benchmark (slowest)")
     args = ap.parse_args()
 
-    from benchmarks import paper_fig5, paper_fig7, paper_table45, tpu_hetero
-    modules = [paper_fig5, paper_fig7, paper_table45, tpu_hetero]
+    from benchmarks import (
+        compiler_bench,
+        paper_fig5,
+        paper_fig7,
+        paper_table45,
+        tpu_hetero,
+    )
+    modules = [paper_fig5, paper_fig7, paper_table45, tpu_hetero,
+               compiler_bench]
     if not args.fast:
         from benchmarks import paper_fig9_12, paper_table3
         modules.append(paper_table3)
@@ -30,12 +38,13 @@ def main() -> None:
     except Exception:                                  # pragma: no cover
         pass
 
-    print("name,us_per_call,derived")
+    out = csv.writer(sys.stdout)
+    out.writerow(["name", "us_per_call", "derived"])
     failures = 0
     for mod in modules:
         try:
             for row in mod.main():
-                print(",".join(str(x) for x in row))
+                out.writerow(row)
                 sys.stdout.flush()
         except Exception:                              # noqa: BLE001
             failures += 1

@@ -1,0 +1,52 @@
+"""NN→ISA compiler toolchain (§3.1's unified 128-bit ISA, end to end).
+
+Pipeline::
+
+    configs/registry + core/workloads      (what to run)
+        └─ networks.network_layers          → GEMM layer list
+            └─ lower.lower_network          → Program (streams + DDR map)
+                ├─ asm.disassemble/assemble → text assembly (bit-exact)
+                ├─ asm.to_binary/from_binary→ packed image (bit-exact)
+                ├─ core.scheduler.simulate_program → Fig. 5 latency
+                └─ executor.GoldenExecutor  → functional outputs, bit-exact
+                                              vs core/hetero_linear.py
+"""
+from repro.compiler.asm import (
+    assemble,
+    disassemble,
+    from_binary,
+    to_binary,
+)
+from repro.compiler.cli import compile_network
+from repro.compiler.executor import ExecutionError, GoldenExecutor
+from repro.compiler.lower import (
+    LayerAddrs,
+    lower_dsp_layer,
+    lower_lut_layer,
+    lower_network,
+    solve_split_dims,
+)
+from repro.compiler.networks import (
+    list_networks,
+    lm_gemm_layers,
+    network_layers,
+)
+from repro.compiler.program import (
+    CoreProgram,
+    GemmLayer,
+    LayerProgram,
+    MemoryMap,
+    Program,
+    ProgramStats,
+    Segment,
+    channel_of,
+)
+
+__all__ = [
+    "assemble", "disassemble", "from_binary", "to_binary",
+    "compile_network", "ExecutionError", "GoldenExecutor",
+    "LayerAddrs", "lower_dsp_layer", "lower_lut_layer", "lower_network",
+    "solve_split_dims", "list_networks", "lm_gemm_layers", "network_layers",
+    "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap", "Program",
+    "ProgramStats", "Segment", "channel_of",
+]

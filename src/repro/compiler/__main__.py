@@ -1,0 +1,5 @@
+import sys
+
+from repro.compiler.cli import main
+
+sys.exit(main())

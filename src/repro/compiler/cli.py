@@ -1,0 +1,143 @@
+"""``python -m repro.compiler`` — compile networks to ISA programs.
+
+Examples::
+
+    python -m repro.compiler resnet18                   # summary
+    python -m repro.compiler llama3.2-1b --format asm   # text assembly
+    python -m repro.compiler mobilenet_v2 --format bin -o mb2.n3h
+    python -m repro.compiler resnet18 --simulate        # + Fig.5 decomposition
+    python -m repro.compiler --list
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.core.scheduler import (
+    DEVICES,
+    DspCoreConfig,
+    LutCoreConfig,
+    simulate_program,
+)
+from repro.compiler import asm
+from repro.compiler.lower import lower_network
+from repro.compiler.networks import list_networks, network_layers
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.compiler",
+        description="Compile a network to unified-ISA instruction streams.")
+    p.add_argument("network", nargs="?",
+                   help="resnet18 | mobilenet_v2 | any registered arch id")
+    p.add_argument("--list", action="store_true",
+                   help="list compilable networks and exit")
+    p.add_argument("--device", default="XC7Z020", choices=sorted(DEVICES))
+    p.add_argument("--bits-w", type=int, default=4,
+                   help="LUT-core weight bit-width (2-8)")
+    p.add_argument("--bits-a", type=int, default=4,
+                   help="activation bit-width (2-8)")
+    p.add_argument("--ratio", type=float, default=None,
+                   help="fixed LUT filter ratio; default solves Eq. 12")
+    p.add_argument("--seq-len", type=int, default=64,
+                   help="token count for LM archs")
+    p.add_argument("--lut-m", type=int, default=8)
+    p.add_argument("--lut-n", type=int, default=16)
+    p.add_argument("--lut-k", type=int, default=128)
+    p.add_argument("--format", choices=("summary", "asm", "bin"),
+                   default="summary")
+    p.add_argument("--simulate", action="store_true",
+                   help="also run the event-driven simulator (summary mode)")
+    p.add_argument("-o", "--output", default=None,
+                   help="write asm/bin to a file instead of stdout")
+    return p
+
+
+def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
+                    bits_a: int = 4, ratio: float | None = None,
+                    seq_len: int = 64, lut_m: int = 8, lut_n: int = 16,
+                    lut_k: int = 128):
+    """Programmatic entry point used by the CLI, benchmarks and tests."""
+    dev = DEVICES[device]
+    lut_cfg = LutCoreConfig(m=lut_m, n=lut_n, k=lut_k)
+    dsp_cfg = DspCoreConfig(n_reg_row_a=DspCoreConfig.rows_for_device(dev))
+    layers = network_layers(name, seq_len=seq_len)
+    n_luts = None
+    if ratio is not None:
+        n_luts = [int(round(ratio * gl.dims.n)) for gl in layers]
+    return lower_network(name, layers, lut_cfg, dsp_cfg, dev,
+                         bits_w_lut=bits_w, bits_a=bits_a, n_luts=n_luts)
+
+
+def summarize(prog, simulate: bool = False) -> str:
+    s = prog.stats()
+    lines = [
+        f"program   {prog.name}  (device {prog.device.name})",
+        f"layers    {len(prog.layers)}",
+        f"instrs    {s.n_instructions}  "
+        + "  ".join(f"{k.lower()}={v}" for k, v in s.by_opcode.items()),
+        f"image     {s.image_bytes} B ({s.n_instructions} x 128-bit words)",
+        f"ddr map   {len(prog.memory.segments)} segments, "
+        f"{s.ddr_footprint} B footprint",
+        f"traffic   {s.bytes_fetched / 1e6:.3f} MB fetched, "
+        f"{s.bytes_written / 1e6:.3f} MB written back",
+    ]
+    split = [lp.n_lut / max(lp.dims.n, 1) for lp in prog.layers]
+    lines.append(f"lut ratio mean={sum(split) / max(len(split), 1):.3f} "
+                 f"min={min(split):.3f} max={max(split):.3f}")
+    if simulate:
+        t0 = time.time()
+        ps = simulate_program(prog)
+        dt = time.time() - t0
+        lines.append(f"simulated {ps.total_cycles} cycles "
+                     f"({prog.device.cycles_to_ms(ps.total_cycles):.3f} ms "
+                     f"@ {prog.device.freq_mhz:.0f} MHz; sim wall {dt:.2f}s)")
+        for core in ("lut", "dsp"):
+            d = ps.decomposition(core)
+            lines.append(f"  {core}: wait={d['l_wait']} run={d['l_run']} "
+                         f"sig={d['l_sig']} rst={d['l_rst']}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list:
+        print("\n".join(list_networks()))
+        return 0
+    if not args.network:
+        build_parser().print_usage()
+        return 2
+    if args.ratio is not None and not 0.0 <= args.ratio <= 1.0:
+        print(f"error: --ratio must be in [0, 1], got {args.ratio}",
+              file=sys.stderr)
+        return 2
+
+    try:
+        prog = compile_network(
+            args.network, device=args.device, bits_w=args.bits_w,
+            bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
+            lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k)
+    except (KeyError, ValueError) as e:
+        msg = e.args[0] if e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+
+    if args.format == "summary":
+        print(summarize(prog, simulate=args.simulate))
+        return 0
+    if args.format == "asm":
+        text = asm.disassemble(prog)
+        if args.output:
+            with open(args.output, "w") as f:
+                f.write(text)
+        else:
+            sys.stdout.write(text)
+        return 0
+    blob = asm.to_binary(prog)
+    if args.output:
+        with open(args.output, "wb") as f:
+            f.write(blob)
+    else:
+        sys.stdout.buffer.write(blob)
+    return 0

@@ -1,0 +1,393 @@
+"""Lowering pass: network layers → unified-ISA instruction streams.
+
+This is the single source of truth for instruction generation. The
+per-layer schedules implement Fig. 3 of the paper:
+
+  * LUT-core (bit-serial, BISMO backbone): the serialized activation
+    matrix L is resident on chip when it fits; weight column tiles R_j
+    stream through a double-buffered weight buffer gated by free-slot
+    tokens (WE); result tiles drain as they complete.
+  * DSP-core (bit-parallel): activation row tiles double-buffered;
+    the weight matrix is cached whole on chip when the weight buffer
+    pool allows, else re-fetched per row tile.
+
+``core/scheduler.py``'s ``lut_core_streams`` / ``dsp_core_streams`` are
+thin wrappers over :func:`lower_lut_layer` / :func:`lower_dsp_layer`,
+so the event-driven simulator, the golden executor and the serialized
+program images all consume the exact same streams.
+
+``lower_network`` walks a whole layer list through the neuron split
+(Eq. 12) and packages everything as a :class:`Program` with a DDR
+memory map and inter-layer barrier tokens (inter-layer synchronous,
+intra-layer asynchronous — §3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.split import split_curves
+from repro.core.scheduler import (
+    DspCoreConfig,
+    FPGADevice,
+    GemmDims,
+    LutCoreConfig,
+    Op,
+    _dma_cycles,
+)
+from repro.compiler.program import (
+    CHANNEL_FLAGS,
+    CoreProgram,
+    GemmLayer,
+    LayerProgram,
+    MemoryMap,
+    Program,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerAddrs:
+    """DDR bases the layer's DMA instructions address (all 32-bit)."""
+    wgt_base: int = 0
+    act_base: int = 0
+    out_base: int = 0
+
+
+def _send(core: isa.CoreSel, src: isa.Engine, dst: isa.Engine,
+          ch: str) -> Op:
+    flag = CHANNEL_FLAGS[ch]
+    return Op(
+        isa.SyncInstr(core=core, src_engine=src, dst_engine=dst, cur_state=0,
+                      next_state=min(3, flag), token_flag=flag, is_wait=0),
+        cycles=1, channel=ch)
+
+
+def _wait(core: isa.CoreSel, src: isa.Engine, dst: isa.Engine,
+          ch: str) -> Op:
+    flag = CHANNEL_FLAGS[ch]
+    return Op(
+        isa.SyncInstr(core=core, src_engine=src, dst_engine=dst, cur_state=1,
+                      next_state=min(3, flag), token_flag=flag, is_wait=1),
+        cycles=1, channel=ch)
+
+
+def _clamp16(v: float) -> int:
+    return min(65535, int(v))
+
+
+# ---------------------------------------------------------------------------
+# LUT-core layer lowering (bit-serial schedule of Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+def lower_lut_layer(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
+                    bits_w: int, bits_a: int, depthwise: bool = False,
+                    addrs: LayerAddrs = LayerAddrs()) -> CoreProgram:
+    """Lower one layer partition onto the LUT-core.
+
+    Cycle model: a (m x n) output tile accumulates over ceil(K_g/K)
+    K-bit beats per binary plane pair; there are bits_w*bits_a plane
+    pairs; plus a fixed array fill/drain per tile. Result tiles are
+    written back to DDR requantized to the next layer's activation
+    bit-width (§3.1), approximated with ``bits_a``.
+    """
+    C = isa.CoreSel.LUT
+    nt_m = math.ceil(g.m / cfg.m)
+    nt_n = math.ceil(g.n / cfg.n)
+    if depthwise:
+        # channels across columns, K = kh*kw taps, derated MAC rate
+        nt_k = 1
+        tile_exec = math.ceil(g.k * bits_w * bits_a /
+                              (cfg.k * cfg.dw_efficiency)) + cfg.pipeline_fill
+        bytes_l = g.m * g.n * bits_a / 8.0      # NHWC, no channel reuse
+        bytes_r_tile = g.k * cfg.n * bits_w / 8.0
+    else:
+        nt_k = math.ceil(g.k / cfg.k)
+        tile_exec = nt_k * bits_w * bits_a + cfg.pipeline_fill
+        bytes_l = g.m * g.k * bits_a / 8.0      # serialized activation planes
+        bytes_r_tile = cfg.n * g.k * bits_w / 8.0   # one weight column-tile
+    bytes_out_tile = cfg.m * cfg.n * bits_a / 8.0   # requantized write-back
+
+    # Activation residency: the activation buffer pool holds M x D_a x K
+    # bits. When the (serialized) L matrix exceeds it, L is re-streamed
+    # for every weight column tile (§3.1).
+    a_capacity_bits = cfg.m * cfg.d_a * cfg.k
+    a_resident = bytes_l * 8 <= a_capacity_bits
+
+    fetch: list[Op] = []
+    execu: list[Op] = []
+    result: list[Op] = []
+    fetched = written = 0.0
+
+    def fetch_wtile(j: int) -> Op:
+        nonlocal fetched
+        fetched += bytes_r_tile
+        return Op(isa.FetchInstr(C, 0, 0, j % 2, addrs.wgt_base, j,
+                                 _clamp16(bytes_r_tile)),
+                  cycles=_dma_cycles(bytes_r_tile, dev))
+
+    def fetch_act(half: int) -> Op:
+        nonlocal fetched
+        fetched += bytes_l
+        return Op(isa.FetchInstr(C, 0, 1, half, addrs.act_base, 0,
+                                 _clamp16(bytes_l)),
+                  cycles=_dma_cycles(bytes_l, dev))
+
+    # R0 first, then L (paper: "R0 is fetched ... then L0 is fetched").
+    fetch.append(fetch_wtile(0))
+    fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile"))
+    fetch.append(fetch_act(0))
+    fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.act"))
+    for j in range(1, nt_n):
+        # Wait for a free slot in the double-buffered weight buffer (WE).
+        fetch.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "lut.wslot"))
+        fetch.append(fetch_wtile(j))
+        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile"))
+        if not a_resident:
+            # re-stream the activation matrix for this column tile
+            fetch.append(fetch_act(j % 2))
+            fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
+                               "lut.act"))
+
+    execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.act"))
+    for j in range(nt_n):
+        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile"))
+        if not a_resident and j > 0:
+            execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
+                               "lut.act"))
+        for i in range(nt_m):
+            execu.append(Op(isa.ExecuteInstr(
+                C, buf_addr_a=(i * nt_k) & 0xFFFF, buf_addr_w=(j * nt_k) & 0xFFFF,
+                tile_m=min(4095, cfg.m), tile_k=min(65535, g.k),
+                tile_n=min(4095, cfg.n), bits_w=bits_w, bits_a=bits_a,
+                accumulate=0), cycles=tile_exec))
+            execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "lut.res"))
+        # Free this weight-buffer slot for the fetch engine (SE).
+        execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "lut.wslot"))
+
+    for j in range(nt_n):
+        for i in range(nt_m):
+            result.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "lut.res"))
+            written += bytes_out_tile
+            result.append(Op(isa.ResultInstr(C, 0, 2, 0, addrs.out_base,
+                                             (j * nt_m + i) & 0xFFFFFF,
+                                             _clamp16(bytes_out_tile)),
+                             cycles=_dma_cycles(bytes_out_tile, dev)))
+
+    # One weight-buffer slot is free at t=0 (the other is filled by the
+    # un-gated first fetch) => effective double buffering.
+    return CoreProgram(
+        core=C,
+        streams={"fetch": fetch, "execute": execu, "result": result},
+        initial_tokens={"lut.wslot": 1},
+        bytes_fetched=fetched, bytes_written=written)
+
+
+# ---------------------------------------------------------------------------
+# DSP-core layer lowering (bit-parallel schedule)
+# ---------------------------------------------------------------------------
+
+
+def lower_dsp_layer(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
+                    depthwise: bool = False,
+                    addrs: LayerAddrs = LayerAddrs()) -> CoreProgram:
+    """Lower one layer partition onto the DSP-core.
+
+    The register arrays compute an [R x 16] x [16 x 16] product per
+    K-step: 2 cycles to fill the weight registers (two columns per
+    buffer per cycle), then 16 systolic MAC cycles. Activation row-tiles
+    are double buffered; weight column-tiles are cached on chip when the
+    weight buffer capacity allows, else re-fetched per row-tile.
+    """
+    C = isa.CoreSel.DSP
+    R = cfg.n_reg_row_a
+    kstep = cfg.w_fill_cycles + cfg.n_reg_col_w + cfg.a_fill_cycles
+    nt_m = math.ceil(g.m / R)
+    nt_n = math.ceil(g.n / cfg.n_reg_col_w)
+    bits_a_stored = 4  # activations are zero-padded to 4 bits in buffers
+    if depthwise:
+        # per-tap diagonal weight mode: 16 channels per pass, derated
+        tile_exec = math.ceil(g.k * kstep /
+                              (cfg.n_reg_col_a * cfg.dw_efficiency))
+        bytes_a_tile = R * cfg.n_reg_col_w * bits_a_stored / 8.0
+        bytes_w_tile = g.k * cfg.n_reg_col_w * 4 / 8.0
+    else:
+        nt_k = math.ceil(g.k / cfg.n_reg_col_a)
+        tile_exec = nt_k * kstep
+        bytes_a_tile = R * g.k * bits_a_stored / 8.0
+        bytes_w_tile = g.k * cfg.n_reg_col_w * 4 / 8.0  # int4 weights
+    bytes_out_tile = R * cfg.n_reg_col_w * bits_a_stored / 8.0
+
+    # Weight resident if every column tile fits the weight buffer pool.
+    w_capacity_bits = (cfg.n_reg_col_w // 2) * cfg.d_w * (cfg.n_reg_col_a * 4)
+    w_resident = nt_n * bytes_w_tile * 8 <= w_capacity_bits
+
+    fetch: list[Op] = []
+    execu: list[Op] = []
+    result: list[Op] = []
+    fetched = written = 0.0
+
+    if w_resident:
+        fetched += nt_n * bytes_w_tile
+        fetch.append(Op(isa.FetchInstr(C, 0, 0, 0, addrs.wgt_base, 0,
+                                       _clamp16(nt_n * bytes_w_tile)),
+                        cycles=_dma_cycles(nt_n * bytes_w_tile, dev)))
+        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wall"))
+
+    for i in range(nt_m):
+        if i >= 2:
+            fetch.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "dsp.aslot"))
+        fetched += bytes_a_tile
+        fetch.append(Op(isa.FetchInstr(C, 0, 1, i % 2, addrs.act_base, i,
+                                       _clamp16(bytes_a_tile)),
+                        cycles=_dma_cycles(bytes_a_tile, dev)))
+        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.atile"))
+        if not w_resident:
+            for j in range(nt_n):
+                fetched += bytes_w_tile
+                fetch.append(Op(isa.FetchInstr(C, 0, 0, j % 2, addrs.wgt_base, j,
+                                               _clamp16(bytes_w_tile)),
+                                cycles=_dma_cycles(bytes_w_tile, dev)))
+                fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
+                                   "dsp.wtile"))
+
+    if w_resident:
+        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wall"))
+    for i in range(nt_m):
+        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.atile"))
+        for j in range(nt_n):
+            if not w_resident:
+                execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
+                                   "dsp.wtile"))
+            execu.append(Op(isa.ExecuteInstr(
+                C, buf_addr_a=i & 0xFFFF, buf_addr_w=j & 0xFFFF,
+                tile_m=min(4095, R), tile_k=min(65535, g.k),
+                tile_n=cfg.n_reg_col_w, bits_w=4, bits_a=4,
+                accumulate=0), cycles=tile_exec))
+            execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "dsp.res"))
+        execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "dsp.aslot"))
+
+    for i in range(nt_m):
+        for j in range(nt_n):
+            result.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "dsp.res"))
+            written += bytes_out_tile
+            result.append(Op(isa.ResultInstr(C, 0, 2, 0, addrs.out_base,
+                                             (i * nt_n + j) & 0xFFFFFF,
+                                             _clamp16(bytes_out_tile)),
+                             cycles=_dma_cycles(bytes_out_tile, dev)))
+
+    return CoreProgram(
+        core=C,
+        streams={"fetch": fetch, "execute": execu, "result": result},
+        initial_tokens={"dsp.aslot": 1},
+        bytes_fetched=fetched, bytes_written=written)
+
+
+# ---------------------------------------------------------------------------
+# Neuron split on raw GEMM dims (Eq. 12 over the closed-form curves)
+# ---------------------------------------------------------------------------
+
+
+def solve_split_dims(g: GemmDims, depthwise: bool, lut_cfg: LutCoreConfig,
+                     dsp_cfg: DspCoreConfig, dev: FPGADevice,
+                     bits_w_lut: int, bits_a: int) -> int:
+    """Exact Eq.-(12) argmin over n_lut in {0..n}; the curves come from
+    ``core/split.py`` so the DSE and the compiler share one solver."""
+    _, _, makespan = split_curves(g, depthwise, lut_cfg, dsp_cfg, dev,
+                                  bits_w_lut, bits_a)
+    return int(np.argmin(makespan))
+
+
+# ---------------------------------------------------------------------------
+# Whole-network lowering
+# ---------------------------------------------------------------------------
+
+
+def _barrier(core: isa.CoreSel, ch: str) -> tuple[Op, Op]:
+    send = _send(core, isa.Engine.RESULT, isa.Engine.FETCH, ch)
+    wait = _wait(core, isa.Engine.RESULT, isa.Engine.FETCH, ch)
+    return send, wait
+
+
+def lower_network(name: str, layers: list[GemmLayer],
+                  lut_cfg: LutCoreConfig, dsp_cfg: DspCoreConfig,
+                  dev: FPGADevice,
+                  bits_w_lut: int | list[int] = 4,
+                  bits_a: int | list[int] = 4,
+                  n_luts: list[int] | None = None) -> Program:
+    """Compile a whole network into a :class:`Program`.
+
+    Per layer: pick the neuron split (given ``n_luts`` or solved via
+    Eq. 12), partition the GEMM along output filters, lower each
+    partition on its core, and allocate DDR segments for weights and
+    the activation chain (layer i reads layer i-1's output segment).
+    Layers are chained inter-layer synchronously: each core's fetch
+    stream for layer i>0 opens with a barrier wait matched by a barrier
+    send at the tail of its layer i-1 result stream.
+    """
+    nl = len(layers)
+    bw = list(bits_w_lut) if isinstance(bits_w_lut, (list, tuple)) \
+        else [bits_w_lut] * nl
+    ba = list(bits_a) if isinstance(bits_a, (list, tuple)) else [bits_a] * nl
+    if len(bw) != nl or len(ba) != nl:
+        raise ValueError("per-layer bit lists must match the layer count")
+    for i, (w, a) in enumerate(zip(bw, ba)):
+        # paper range is 2-8 (and the ISA bit-width fields are 4 bits)
+        if not (2 <= w <= 8 and 2 <= a <= 8):
+            raise ValueError(
+                f"layer {i}: bit-widths must be in 2..8, got "
+                f"bits_w_lut={w} bits_a={a}")
+
+    mem = MemoryMap()
+    in_seg = mem.alloc("act.in", math.ceil(layers[0].dims.m
+                                           * layers[0].dims.k * ba[0] / 8)
+                       if nl else 0)
+
+    progs: list[LayerProgram] = []
+    prev_in = in_seg
+    for i, layer in enumerate(layers):
+        g = layer.dims
+        if n_luts is not None:
+            n_lut = int(min(max(n_luts[i], 0), g.n))
+        else:
+            n_lut = solve_split_dims(g, layer.depthwise, lut_cfg, dsp_cfg,
+                                     dev, bw[i], ba[i])
+        g_lut = GemmDims(g.m, g.k, n_lut)
+        g_dsp = GemmDims(g.m, g.k, g.n - n_lut)
+
+        wgt_lut = mem.alloc(f"L{i}.wgt.lut",
+                            math.ceil(g.k * g_lut.n * bw[i] / 8))
+        wgt_dsp = mem.alloc(f"L{i}.wgt.dsp", math.ceil(g.k * g_dsp.n * 4 / 8))
+        out_seg = mem.alloc(f"L{i}.out", math.ceil(g.m * g.n * ba[i] / 8))
+
+        lut_cp = dsp_cp = None
+        if g_lut.n > 0:
+            lut_cp = lower_lut_layer(
+                g_lut, lut_cfg, dev, bw[i], ba[i], layer.depthwise,
+                LayerAddrs(wgt_lut.base, prev_in.base, out_seg.base))
+        if g_dsp.n > 0:
+            dsp_cp = lower_dsp_layer(
+                g_dsp, dsp_cfg, dev, layer.depthwise,
+                LayerAddrs(wgt_dsp.base, prev_in.base, out_seg.base))
+
+        progs.append(LayerProgram(
+            index=i, name=layer.name, dims=g, n_lut=n_lut,
+            bits_w_lut=bw[i], bits_a=ba[i], depthwise=layer.depthwise,
+            lut=lut_cp, dsp=dsp_cp))
+        prev_in = out_seg
+
+    # Inter-layer barriers (per core, when active on both sides).
+    for prev, cur in zip(progs, progs[1:]):
+        for attr, ch in (("lut", "lut.bar"), ("dsp", "dsp.bar")):
+            p_cp, c_cp = getattr(prev, attr), getattr(cur, attr)
+            if p_cp is None or c_cp is None:
+                continue
+            send, wait = _barrier(p_cp.core, ch)
+            p_cp.streams["result"].append(send)
+            c_cp.streams["fetch"].insert(0, wait)
+
+    return Program(name=name, device=dev, lut_cfg=lut_cfg, dsp_cfg=dsp_cfg,
+                   layers=progs, memory=mem)

@@ -1,0 +1,287 @@
+"""Program IR of the NN→ISA compiler.
+
+A :class:`Program` is the compiler's output artifact and the single
+currency everything downstream consumes:
+
+  * ``core/scheduler.py`` simulates its per-engine instruction streams
+    (the Fig. 3/Fig. 5 latency decomposition);
+  * ``compiler/executor.py`` interprets it functionally against the
+    reference GEMM numerics (golden model);
+  * ``compiler/asm.py`` serializes it to text assembly and to a packed
+    binary image, bit-exactly.
+
+Structure: one :class:`LayerProgram` per network layer, each holding the
+two per-core instruction streams (LUT bit-serial partition + DSP
+bit-parallel partition) produced by the neuron split, plus the DDR
+:class:`MemoryMap` that positions weights/activations/outputs.
+
+Every instruction is a real 128-bit ``core/isa.py`` word; each carries a
+timing closure (busy cycles once runnable — the scheduler's DMA/compute
+cycle model evaluated at lowering time) and, for Sync instructions, the
+token channel it posts to / consumes from. Channels are recoverable
+from the encoded word alone via the per-core ``token_flag`` tables
+below, so disassembly loses nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import isa
+from repro.core.scheduler import (
+    DspCoreConfig,
+    FPGADevice,
+    GemmDims,
+    LutCoreConfig,
+    Op,
+)
+
+# ---------------------------------------------------------------------------
+# Sync channel <-> token_flag tables (3-bit flag per core)
+# ---------------------------------------------------------------------------
+
+# LUT-core channels: weight column tile ready (SE), activation matrix
+# ready, free weight-buffer slot (WE), result tile ready, layer barrier.
+LUT_CHANNEL_FLAGS = {"lut.wtile": 1, "lut.act": 2, "lut.wslot": 3,
+                     "lut.res": 4, "lut.bar": 5}
+# DSP-core channels: whole-weight-resident ready, activation row tile,
+# weight column tile, free activation slot, result tile, layer barrier.
+DSP_CHANNEL_FLAGS = {"dsp.wall": 1, "dsp.atile": 2, "dsp.wtile": 3,
+                     "dsp.aslot": 4, "dsp.res": 5, "dsp.bar": 6}
+
+CHANNEL_FLAGS = {**LUT_CHANNEL_FLAGS, **DSP_CHANNEL_FLAGS}
+FLAG_CHANNELS = {
+    isa.CoreSel.LUT: {f: ch for ch, f in LUT_CHANNEL_FLAGS.items()},
+    isa.CoreSel.DSP: {f: ch for ch, f in DSP_CHANNEL_FLAGS.items()},
+}
+
+ENGINES = ("fetch", "execute", "result")
+CORE_NAMES = {isa.CoreSel.LUT: "lut", isa.CoreSel.DSP: "dsp"}
+
+
+def channel_of(instr: isa.SyncInstr) -> str:
+    """Recover the token channel name from an encoded Sync instruction."""
+    try:
+        return FLAG_CHANNELS[instr.core][instr.token_flag]
+    except KeyError:
+        raise ValueError(
+            f"unknown sync token flag {instr.token_flag} for core "
+            f"{instr.core!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# DDR memory map
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One named DDR region. ``size`` in bytes; tile-granular DMA
+    instructions address it as (ddr_base=base, ddr_offset=tile index)."""
+    name: str
+    base: int
+    size: int
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+
+class MemoryMap:
+    """Bump allocator over the 32-bit DDR space, 64-byte aligned."""
+
+    ALIGN = 64
+
+    def __init__(self):
+        self.segments: list[Segment] = []
+        self._by_name: dict[str, Segment] = {}
+        self._cursor = 0
+
+    def alloc(self, name: str, size: int) -> Segment:
+        if name in self._by_name:
+            raise ValueError(f"duplicate segment {name!r}")
+        size = max(int(size), 0)
+        base = self._cursor
+        seg = Segment(name, base, size)
+        aligned = (size + self.ALIGN - 1) // self.ALIGN * self.ALIGN
+        self._cursor = base + aligned
+        if self._cursor >= (1 << 32):
+            raise ValueError(f"DDR map overflows 32-bit space at {name!r}")
+        self.segments.append(seg)
+        self._by_name[name] = seg
+        return seg
+
+    def __getitem__(self, name: str) -> Segment:
+        return self._by_name[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    @property
+    def footprint(self) -> int:
+        return self._cursor
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, MemoryMap)
+                and self.segments == other.segments)
+
+    def __repr__(self) -> str:
+        return f"MemoryMap({len(self.segments)} segments, {self.footprint}B)"
+
+
+# ---------------------------------------------------------------------------
+# Per-core, per-layer stream bundles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CoreProgram:
+    """One core's three engine streams for one layer partition."""
+    core: isa.CoreSel
+    streams: dict[str, list[Op]]
+    initial_tokens: dict[str, int]
+    # lowering-time stats (bytes are exact, pre-clamp model quantities)
+    bytes_fetched: float = 0.0
+    bytes_written: float = 0.0
+
+    @property
+    def n_instructions(self) -> int:
+        return sum(len(s) for s in self.streams.values())
+
+    def ops(self):
+        for e in ENGINES:
+            yield from self.streams.get(e, [])
+
+    def sim_tokens(self) -> dict[str, int]:
+        """Initial tokens for simulating this layer *in isolation*.
+
+        The program artifact keeps inter-layer barrier waits un-armed —
+        on hardware (or a concurrent multi-layer consumer) the matching
+        send at the tail of the previous layer's result stream posts
+        them. Layer-at-a-time simulation/execution models the Eq.-10
+        synchronous chain, where the previous layer has fully drained,
+        so any barrier-channel deficit is pre-armed at t=0 here.
+        """
+        tokens = dict(self.initial_tokens)
+        ch = f"{CORE_NAMES[self.core]}.bar"
+        # Arm every in-layer barrier *wait*; the layer's own barrier
+        # *send* targets the next layer and must not offset the count.
+        waits = sum(1 for op in self.ops()
+                    if op.channel == ch
+                    and isinstance(op.instr, isa.SyncInstr)
+                    and op.instr.is_wait)
+        deficit = waits - tokens.get(ch, 0)
+        if deficit > 0:
+            tokens[ch] = tokens.get(ch, 0) + deficit
+        return tokens
+
+
+@dataclasses.dataclass
+class LayerProgram:
+    """One network layer lowered under its neuron split."""
+    index: int
+    name: str
+    dims: GemmDims               # full (un-split) layer GEMM
+    n_lut: int                   # filters on the LUT (bit-serial) core
+    bits_w_lut: int
+    bits_a: int
+    depthwise: bool
+    lut: CoreProgram | None      # None when n_lut == 0
+    dsp: CoreProgram | None      # None when n_lut == dims.n
+
+    @property
+    def n_dsp(self) -> int:
+        return self.dims.n - self.n_lut
+
+    def cores(self) -> list[CoreProgram]:
+        return [c for c in (self.lut, self.dsp) if c is not None]
+
+    @property
+    def n_instructions(self) -> int:
+        return sum(c.n_instructions for c in self.cores())
+
+
+# ---------------------------------------------------------------------------
+# Whole-network Program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProgramStats:
+    n_instructions: int
+    by_opcode: dict[str, int]
+    bytes_fetched: float
+    bytes_written: float
+    ddr_footprint: int
+
+    @property
+    def bytes_moved(self) -> float:
+        return self.bytes_fetched + self.bytes_written
+
+    @property
+    def image_bytes(self) -> int:
+        return self.n_instructions * isa.WORD_BITS // 8
+
+
+@dataclasses.dataclass
+class Program:
+    """A whole network compiled to unified-ISA instruction streams."""
+    name: str
+    device: FPGADevice
+    lut_cfg: LutCoreConfig
+    dsp_cfg: DspCoreConfig
+    layers: list[LayerProgram]
+    memory: MemoryMap
+
+    def stats(self) -> ProgramStats:
+        by_op = {op.name: 0 for op in isa.Opcode}
+        fetched = written = 0.0
+        n = 0
+        for lp in self.layers:
+            for cp in lp.cores():
+                fetched += cp.bytes_fetched
+                written += cp.bytes_written
+                for op in cp.ops():
+                    by_op[op.instr.opcode.name] += 1
+                    n += 1
+        return ProgramStats(n, by_op, fetched, written, self.memory.footprint)
+
+    @property
+    def n_instructions(self) -> int:
+        return sum(lp.n_instructions for lp in self.layers)
+
+    def words(self) -> list[int]:
+        """Flat 128-bit instruction image (layer-major, lut before dsp,
+        fetch/execute/result engine order)."""
+        return [op.instr.encode()
+                for lp in self.layers
+                for cp in lp.cores()
+                for op in cp.ops()]
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Program):
+            return NotImplemented
+        return (self.name == other.name
+                and self.device == other.device
+                and self.lut_cfg == other.lut_cfg
+                and self.dsp_cfg == other.dsp_cfg
+                and self.layers == other.layers
+                and self.memory == other.memory)
+
+
+# ---------------------------------------------------------------------------
+# Generic layer description consumed by the lowering pass
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmLayer:
+    """A layer already reduced to GEMM extents (im2col view for convs,
+    direct for linears). This is what ``networks.py`` produces for both
+    the CNN workload zoo and the LM registry archs."""
+    name: str
+    dims: GemmDims
+    depthwise: bool = False
+
+    @staticmethod
+    def from_conv(spec) -> "GemmLayer":
+        return GemmLayer(spec.name, spec.gemm(), spec.depthwise)

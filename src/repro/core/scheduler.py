@@ -1,17 +1,18 @@
-"""Instruction scheduling & event-driven pipeline simulation (Fig. 3).
+"""Event-driven pipeline simulation (Fig. 3).
 
 N3H-Core is *intra-layer asynchronous*: three engines (Fetch, Execute,
 Result) per core run their own instruction streams and handshake through
 sync tokens (SE = sync-execute, WF = wait-fetch, WE = wait-execute).
-This module:
+This module simulates those streams with an event-driven engine model,
+yielding the latency decomposition of Eqs. (6) and (8):
+L = sum(L_wait) + sum(L_run) + sum(L_sig) + sum(L_rst).
 
-  1. generates the per-layer instruction streams for the LUT-core
-     (bit-serial, BISMO-backbone) and the DSP-core (bit-parallel),
-     following the schedule of Fig. 3 (weight tiles double-buffered,
-     activations resident, result write-back overlapped); and
-  2. simulates the streams with an event-driven engine model, yielding
-     the latency decomposition of Eqs. (6) and (8):
-     L = sum(L_wait) + sum(L_run) + sum(L_sig) + sum(L_rst).
+Instruction generation lives in ``repro.compiler.lower`` — the NN→ISA
+compiler is the single source of truth for streams, and this simulator
+consumes its output: either raw per-layer streams (the historical
+``lut_core_streams`` / ``dsp_core_streams`` entry points, now thin
+wrappers over the compiler) or a whole compiled ``Program`` via
+:func:`simulate_program`.
 
 The simulator is the ground-truth latency model; `latency_model.py`
 derives closed-form approximations from the same pipeline structure and
@@ -217,28 +218,12 @@ def _is_wait(op: Op) -> bool:
     return isinstance(op.instr, isa.SyncInstr) and op.instr.is_wait == 1
 
 
-def _send(core: isa.CoreSel, src: isa.Engine, dst: isa.Engine, ch: str,
-          flag: int = 0) -> Op:
-    return Op(
-        isa.SyncInstr(core=core, src_engine=src, dst_engine=dst, cur_state=0,
-                      next_state=min(3, flag), token_flag=flag & 0x7, is_wait=0),
-        cycles=1, channel=ch)
-
-
-def _wait(core: isa.CoreSel, src: isa.Engine, dst: isa.Engine, ch: str,
-          flag: int = 0) -> Op:
-    return Op(
-        isa.SyncInstr(core=core, src_engine=src, dst_engine=dst, cur_state=1,
-                      next_state=min(3, flag), token_flag=flag & 0x7, is_wait=1),
-        cycles=1, channel=ch)
-
-
 def _dma_cycles(n_bytes: float, dev: FPGADevice) -> int:
     return int(math.ceil(n_bytes / dev.dma_bytes_per_cycle)) + dev.dma_setup_cycles
 
 
 # ---------------------------------------------------------------------------
-# LUT-core schedule (bit-serial, Fig. 3)
+# Stream generation — thin wrappers over the NN→ISA compiler
 # ---------------------------------------------------------------------------
 
 
@@ -247,101 +232,13 @@ def lut_core_streams(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
                      ) -> tuple[dict[str, list[Op]], dict[str, int]]:
     """Instruction streams for one layer partition on the LUT-core.
 
-    Schedule (per Fig. 3): the whole (bit-serialized) activation matrix L
-    is resident on chip; weight column-tiles R_j are streamed through a
-    double-buffered weight buffer; output tiles are drained by the
-    result engine as they complete.
-
-    Cycle model: a (m x n) output tile accumulates over ceil(K_g/K)
-    K-bit beats per binary plane pair; there are bits_w*bits_a plane
-    pairs; plus a fixed array fill/drain per tile. Result tiles are
-    written back to DDR *requantized* to the next layer's activation
-    bit-width (§3.1: "written to DDR as the activation of the next
-    layer"), which we approximate with bits_a.
+    Delegates to ``repro.compiler.lower.lower_lut_layer`` — the compiler
+    owns the Fig.-3 schedule; this wrapper keeps the historical
+    (streams, initial_tokens) shape the simulator entry points consume.
     """
-    C = isa.CoreSel.LUT
-    nt_m = math.ceil(g.m / cfg.m)
-    nt_n = math.ceil(g.n / cfg.n)
-    if depthwise:
-        # channels across columns, K = kh*kw taps, derated MAC rate
-        nt_k = 1
-        tile_exec = math.ceil(g.k * bits_w * bits_a /
-                              (cfg.k * cfg.dw_efficiency)) + cfg.pipeline_fill
-        bytes_l = g.m * g.n * bits_a / 8.0      # NHWC, no channel reuse
-        bytes_r_tile = g.k * cfg.n * bits_w / 8.0
-    else:
-        nt_k = math.ceil(g.k / cfg.k)
-        tile_exec = nt_k * bits_w * bits_a + cfg.pipeline_fill
-        bytes_l = g.m * g.k * bits_a / 8.0      # serialized activation planes
-        bytes_r_tile = cfg.n * g.k * bits_w / 8.0   # one weight column-tile
-    bytes_out_tile = cfg.m * cfg.n * bits_a / 8.0   # requantized write-back
-
-    # Activation residency: the activation buffer pool holds M x D_a x K
-    # bits. When the (serialized) L matrix exceeds it, L is re-streamed
-    # for every weight column tile — the paper's schedule only avoids
-    # this when "the activation buffers possess the capacity of the
-    # activation matrix L" (§3.1).
-    a_capacity_bits = cfg.m * cfg.d_a * cfg.k
-    a_resident = bytes_l * 8 <= a_capacity_bits
-
-    fetch: list[Op] = []
-    execu: list[Op] = []
-    result: list[Op] = []
-
-    # R0 first, then L (paper: "R0 is fetched ... then L0 is fetched as well").
-    fetch.append(Op(isa.FetchInstr(C, 0, 0, 0, 0, 0, min(65535, int(bytes_r_tile))),
-                    cycles=_dma_cycles(bytes_r_tile, dev)))
-    fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile", 1))
-    fetch.append(Op(isa.FetchInstr(C, 0, 1, 0, 0, 0, min(65535, int(bytes_l))),
-                    cycles=_dma_cycles(bytes_l, dev)))
-    fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.act", 1))
-    for j in range(1, nt_n):
-        # Wait for a free slot in the double-buffered weight buffer (WE).
-        fetch.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "lut.wslot", 2))
-        fetch.append(Op(isa.FetchInstr(C, 0, 0, j % 2, 0, j,
-                                       min(65535, int(bytes_r_tile))),
-                        cycles=_dma_cycles(bytes_r_tile, dev)))
-        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile", 1))
-        if not a_resident:
-            # re-stream the activation matrix for this column tile
-            fetch.append(Op(isa.FetchInstr(C, 0, 1, j % 2, 0, j,
-                                           min(65535, int(bytes_l))),
-                            cycles=_dma_cycles(bytes_l, dev)))
-            fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
-                               "lut.act", 1))
-
-    execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.act", 1))
-    for j in range(nt_n):
-        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "lut.wtile", 1))
-        if not a_resident and j > 0:
-            execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE,
-                               "lut.act", 1))
-        for i in range(nt_m):
-            execu.append(Op(isa.ExecuteInstr(
-                C, buf_addr_a=(i * nt_k) & 0xFFFF, buf_addr_w=(j * nt_k) & 0xFFFF,
-                tile_m=min(4095, cfg.m), tile_k=min(65535, g.k),
-                tile_n=min(4095, cfg.n), bits_w=bits_w, bits_a=bits_a,
-                accumulate=0), cycles=tile_exec))
-            execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "lut.res", 3))
-        # Free this weight-buffer slot for the fetch engine (SE).
-        execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "lut.wslot", 2))
-
-    for j in range(nt_n):
-        for i in range(nt_m):
-            result.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "lut.res", 3))
-            result.append(Op(isa.ResultInstr(C, 0, 2, 0, 0, (j * nt_m + i) & 0xFFFFFF,
-                                             min(65535, int(bytes_out_tile))),
-                             cycles=_dma_cycles(bytes_out_tile, dev)))
-
-    streams = {"fetch": fetch, "execute": execu, "result": result}
-    # One weight-buffer slot is free at t=0 (the other is filled by the
-    # un-gated first fetch) => effective double buffering.
-    return streams, {"lut.wslot": 1}
-
-
-# ---------------------------------------------------------------------------
-# DSP-core schedule (bit-parallel)
-# ---------------------------------------------------------------------------
+    from repro.compiler.lower import lower_lut_layer
+    cp = lower_lut_layer(g, cfg, dev, bits_w, bits_a, depthwise)
+    return cp.streams, cp.initial_tokens
 
 
 def dsp_core_streams(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
@@ -349,83 +246,12 @@ def dsp_core_streams(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
                      ) -> tuple[dict[str, list[Op]], dict[str, int]]:
     """Instruction streams for one layer partition on the DSP-core.
 
-    The register arrays compute an [R x 16] x [16 x 16] product per
-    K-step: 2 cycles to fill the weight registers (two columns per
-    buffer per cycle), then 16 systolic MAC cycles. Activation row-tiles
-    are double buffered; weight column-tiles are cached on chip when the
-    weight buffer capacity allows, else re-fetched per row-tile.
+    Delegates to ``repro.compiler.lower.lower_dsp_layer`` (see
+    ``lut_core_streams``).
     """
-    C = isa.CoreSel.DSP
-    R = cfg.n_reg_row_a
-    kstep = cfg.w_fill_cycles + cfg.n_reg_col_w + cfg.a_fill_cycles
-    nt_m = math.ceil(g.m / R)
-    nt_n = math.ceil(g.n / cfg.n_reg_col_w)
-    bits_a_stored = 4  # activations are zero-padded to 4 bits in buffers
-    if depthwise:
-        # per-tap diagonal weight mode: 16 channels per pass, derated
-        tile_exec = math.ceil(g.k * kstep /
-                              (cfg.n_reg_col_a * cfg.dw_efficiency))
-        bytes_a_tile = R * cfg.n_reg_col_w * bits_a_stored / 8.0
-        bytes_w_tile = g.k * cfg.n_reg_col_w * 4 / 8.0
-    else:
-        nt_k = math.ceil(g.k / cfg.n_reg_col_a)
-        tile_exec = nt_k * kstep
-        bytes_a_tile = R * g.k * bits_a_stored / 8.0
-        bytes_w_tile = g.k * cfg.n_reg_col_w * 4 / 8.0  # int4 weights
-    bytes_out_tile = R * cfg.n_reg_col_w * bits_a_stored / 8.0
-
-    # Weight resident if every column tile fits the weight buffer pool.
-    w_capacity_bits = (cfg.n_reg_col_w // 2) * cfg.d_w * (cfg.n_reg_col_a * 4)
-    w_resident = nt_n * bytes_w_tile * 8 <= w_capacity_bits
-
-    fetch: list[Op] = []
-    execu: list[Op] = []
-    result: list[Op] = []
-
-    if w_resident:
-        fetch.append(Op(isa.FetchInstr(C, 0, 0, 0, 0, 0,
-                                       min(65535, int(nt_n * bytes_w_tile))),
-                        cycles=_dma_cycles(nt_n * bytes_w_tile, dev)))
-        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wall", 1))
-
-    for i in range(nt_m):
-        if i >= 2:
-            fetch.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "dsp.aslot", 2))
-        fetch.append(Op(isa.FetchInstr(C, 0, 1, i % 2, 0, i,
-                                       min(65535, int(bytes_a_tile))),
-                        cycles=_dma_cycles(bytes_a_tile, dev)))
-        fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.atile", 1))
-        if not w_resident:
-            for j in range(nt_n):
-                fetch.append(Op(isa.FetchInstr(C, 0, 0, j % 2, 0, j,
-                                               min(65535, int(bytes_w_tile))),
-                                cycles=_dma_cycles(bytes_w_tile, dev)))
-                fetch.append(_send(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wtile", 1))
-
-    if w_resident:
-        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wall", 1))
-    for i in range(nt_m):
-        execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.atile", 1))
-        for j in range(nt_n):
-            if not w_resident:
-                execu.append(_wait(C, isa.Engine.FETCH, isa.Engine.EXECUTE, "dsp.wtile", 1))
-            execu.append(Op(isa.ExecuteInstr(
-                C, buf_addr_a=i & 0xFFFF, buf_addr_w=j & 0xFFFF,
-                tile_m=min(4095, R), tile_k=min(65535, g.k),
-                tile_n=cfg.n_reg_col_w, bits_w=4, bits_a=4,
-                accumulate=0), cycles=tile_exec))
-            execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "dsp.res", 3))
-        execu.append(_send(C, isa.Engine.EXECUTE, isa.Engine.FETCH, "dsp.aslot", 2))
-
-    for i in range(nt_m):
-        for j in range(nt_n):
-            result.append(_wait(C, isa.Engine.EXECUTE, isa.Engine.RESULT, "dsp.res", 3))
-            result.append(Op(isa.ResultInstr(C, 0, 2, 0, 0, (i * nt_n + j) & 0xFFFFFF,
-                                             min(65535, int(bytes_out_tile))),
-                             cycles=_dma_cycles(bytes_out_tile, dev)))
-
-    streams = {"fetch": fetch, "execute": execu, "result": result}
-    return streams, {"dsp.aslot": 1}
+    from repro.compiler.lower import lower_dsp_layer
+    cp = lower_dsp_layer(g, cfg, dev, depthwise)
+    return cp.streams, cp.initial_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -449,3 +275,69 @@ def simulate_dsp_core(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
                              "result": EngineTrace()}, 0)
     streams, init = dsp_core_streams(g, cfg, dev, depthwise)
     return simulate(streams, init)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-Program simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerSim:
+    """Per-layer simulation of a compiled program layer: both cores run
+    concurrently, the layer's makespan is their max (Eq. 10 inner term)."""
+    name: str
+    lut: SimResult | None
+    dsp: SimResult | None
+
+    @property
+    def cycles(self) -> int:
+        return max((r.total_cycles for r in (self.lut, self.dsp)
+                    if r is not None), default=0)
+
+
+@dataclasses.dataclass
+class ProgramSim:
+    layers: list[LayerSim]
+
+    @property
+    def total_cycles(self) -> int:
+        """Eq. (10): inter-layer synchronous sum of per-layer makespans."""
+        return sum(ls.cycles for ls in self.layers)
+
+    @property
+    def n_instructions(self) -> int:
+        return sum(r.n_instructions for ls in self.layers
+                   for r in (ls.lut, ls.dsp) if r is not None)
+
+    def decomposition(self, core: str) -> dict[str, int]:
+        """Aggregate Eq. (6)/(8) terms over layers for one core."""
+        agg = {"l_wait": 0, "l_run": 0, "l_sig": 0, "l_rst": 0}
+        for ls in self.layers:
+            r = getattr(ls, core)
+            if r is None:
+                continue
+            agg["l_wait"] += r.l_wait
+            agg["l_run"] += r.l_run
+            agg["l_sig"] += r.l_sig
+            agg["l_rst"] += r.l_rst
+        return agg
+
+
+def simulate_program(prog) -> ProgramSim:
+    """Run a compiled ``repro.compiler.Program`` through the event-driven
+    engine model, layer by layer (inter-layer synchronous, §3.1): the
+    compiler is the single source of truth for the streams; this is the
+    same Fig. 5 ground-truth model the closed forms validate against.
+    """
+    layers = []
+    for lp in prog.layers:
+        sims = {}
+        for attr in ("lut", "dsp"):
+            cp = getattr(lp, attr)
+            # sim_tokens() arms inter-layer barrier waits at t=0: under
+            # the Eq.-10 synchronous chain the previous layer has drained.
+            sims[attr] = (simulate(cp.streams, cp.sim_tokens())
+                          if cp is not None else None)
+        layers.append(LayerSim(lp.name, sims["lut"], sims["dsp"]))
+    return ProgramSim(layers)

@@ -32,17 +32,27 @@ class SplitResult:
     curve: np.ndarray | None = None   # makespan per candidate (for Fig. 7)
 
 
+def split_curves(g, depthwise: bool, lut_cfg: LutCoreConfig,
+                 dsp_cfg: DspCoreConfig, dev: FPGADevice,
+                 bits_w_lut: int, bits_a: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-candidate (c_lut, c_dsp, makespan) curves over n_lut in
+    {0..n} — the Eq.-(12) inner terms on raw GEMM dims. Shared by this
+    module's ConvSpec-facing solver and the compiler's lowering pass."""
+    cand = np.arange(0, g.n + 1, dtype=np.float64)
+    c_lut = lut_core_latency(g.m, g.k, cand, lut_cfg, dev,
+                             bits_w_lut, bits_a, depthwise)
+    c_dsp = dsp_core_latency(g.m, g.k, g.n - cand, dsp_cfg, dev, depthwise)
+    return c_lut, c_dsp, np.maximum(c_lut, c_dsp)
+
+
 def solve_split(spec: ConvSpec, lut_cfg: LutCoreConfig, dsp_cfg: DspCoreConfig,
                 dev: FPGADevice, bits_w_lut: int, bits_a: int,
                 keep_curve: bool = False) -> SplitResult:
     """Exact Eq.-(12) solver over n_lut in {0..c_out}."""
     g = spec.gemm()
-    cand = np.arange(0, g.n + 1, dtype=np.float64)
-
-    c_lut = lut_core_latency(g.m, g.k, cand, lut_cfg, dev,
-                             bits_w_lut, bits_a, spec.depthwise)
-    c_dsp = dsp_core_latency(g.m, g.k, g.n - cand, dsp_cfg, dev, spec.depthwise)
-    makespan = np.maximum(c_lut, c_dsp)
+    c_lut, c_dsp, makespan = split_curves(g, spec.depthwise, lut_cfg,
+                                          dsp_cfg, dev, bits_w_lut, bits_a)
     best = int(np.argmin(makespan))
     return SplitResult(
         n_lut=best,

@@ -174,7 +174,6 @@ def with_logical_constraint(x: jax.Array, axes: Sequence[str | None],
 
 
 def _current_mesh() -> Mesh | None:
-    env_mesh = jax.sharding.get_abstract_mesh()
     try:
         from jax._src.mesh import thread_resources
         m = thread_resources.env.physical_mesh
@@ -182,7 +181,6 @@ def _current_mesh() -> Mesh | None:
             return m
     except Exception:
         pass
-    del env_mesh
     return None
 
 

@@ -1,0 +1,204 @@
+"""Fallback property-testing shim used when `hypothesis` is absent.
+
+The tier-1 suite uses a small slice of the hypothesis API
+(`given`/`settings`, `strategies.integers/floats/booleans/sampled_from`,
+`extra.numpy.arrays/array_shapes`). This container does not ship
+hypothesis, which used to make four test modules fail at *collection*.
+`install()` registers a minimal, deterministic stand-in under the
+`hypothesis` module names so those modules import and run everywhere;
+when the real package is installed it is used untouched (see
+``conftest.py``).
+
+The stand-in draws pseudo-random examples from a per-test seeded
+`random.Random`, so runs are reproducible; it does no shrinking and no
+database — it is a sampler, not a fuzzer.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): skip this example."""
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied
+        return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+           allow_infinity=False, width=64):
+    def draw(rng):
+        v = rng.uniform(min_value, max_value)
+        if width == 32:
+            v = float(np.float32(v))
+        return v
+    return _Strategy(draw)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    return _Strategy(lambda rng: rng.choice(strategies).example(rng))
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+# -- hypothesis.extra.numpy ------------------------------------------------
+
+
+def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=10):
+    return _Strategy(lambda rng: tuple(
+        rng.randint(min_side, max_side)
+        for _ in range(rng.randint(min_dims, max_dims))))
+
+
+def arrays(dtype, shape, elements=None, fill=None, unique=False):
+    def draw(rng):
+        shp = shape.example(rng) if isinstance(shape, _Strategy) else shape
+        if isinstance(shp, int):
+            shp = (shp,)
+        size = int(np.prod(shp, dtype=np.int64)) if shp else 1
+        if elements is not None:
+            flat = [elements.example(rng) for _ in range(size)]
+        elif np.issubdtype(np.dtype(dtype), np.integer):
+            info = np.iinfo(dtype)
+            flat = [rng.randint(info.min, info.max) for _ in range(size)]
+        else:
+            flat = [rng.uniform(-1e3, 1e3) for _ in range(size)]
+        return np.asarray(flat, dtype=dtype).reshape(shp)
+    return _Strategy(draw)
+
+
+# -- given / settings / assume ---------------------------------------------
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def given(*args, **strategies):
+    if args:
+        raise TypeError(
+            "the hypothesis shim only supports keyword strategies")
+
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_hypothesis_max_examples",
+                        _DEFAULT_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            for _ in range(n * 5):
+                if ran >= n:
+                    break
+                try:
+                    example = {k: s.example(rng)
+                               for k, s in strategies.items()}
+                    fn(**example)
+                except _Unsatisfied:
+                    continue
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (shim): {example!r}") from e
+                ran += 1
+            return None
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        return wrapper
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._hypothesis_max_examples = max_examples
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def install() -> None:
+    """Register the shim under the `hypothesis` module names."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0-repro-shim"
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "sampled_from", "just",
+                 "one_of", "lists", "tuples"):
+        setattr(st, name, globals()[name])
+
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = arrays
+    hnp.array_shapes = array_shapes
+
+    hyp.strategies = st
+    extra.numpy = hnp
+    hyp.extra = extra
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = hnp

@@ -1,0 +1,17 @@
+"""Test-suite bootstrap.
+
+Prefers the real `hypothesis` package; when it is not installed (this
+container does not ship it) the deterministic shim in
+`_hypothesis_compat.py` is registered under the same module names so
+the property-test modules collect and run everywhere.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_compat
+    _hypothesis_compat.install()
