@@ -1,19 +1,39 @@
-"""Compiler throughput benchmark: compile wall-time, instruction count,
-bytes moved and DDR footprint per network.
+"""Compiler benchmark: compile wall-time, instruction counts, bytes
+moved, DDR footprint — plus the optimization-pass pipeline and executor
+backends:
+
+  * per network: -O0 vs -O1 instruction counts with per-pass deltas
+    (weight-prefetch / sync-elision / dma-fusion) and, for the
+    simulation subset, simulated-latency deltas from
+    ``simulate_program`` (optimized streams are what gets timed);
+  * one registry LM smoke program executed functionally on both
+    backends: golden interpreter vs batched Pallas fast path, wall
+    clock + speedup + a bit-exactness flag.
 
 Covers both CNN workloads and a slice of the LM registry, so compile
 cost is tracked for every frontend family. Each row's ``derived`` field
 carries a ``BENCH`` JSON blob with the program-level metrics the
-roadmap cares about (instruction mix, image size, traffic).
+roadmap cares about. ``--smoke`` restricts to a fast subset for CI.
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import json
 import sys
 import time
 
-from repro.compiler import compile_network, to_binary
+import numpy as np
+
+from repro.compiler import (
+    GoldenExecutor,
+    PallasExecutor,
+    bind_synthetic,
+    compile_network,
+    optimize_program,
+    to_binary,
+)
+from repro.core.scheduler import simulate_program
 
 NETWORKS = [
     ("resnet18", {}),
@@ -22,34 +42,112 @@ NETWORKS = [
     ("qwen3-moe-235b-a22b", {"seq_len": 64}),
     ("mamba2-780m", {"seq_len": 64}),
 ]
+SMOKE_NETWORKS = [
+    ("llama3.2-1b", {"seq_len": 16}),
+    ("mamba2-780m", {"seq_len": 16}),
+]
+#: networks whose -O0/-O1 simulated latency is reported (simulation of
+#: the big CNN im2col programs is minutes-long; instruction deltas are
+#: still reported for every network)
+SIMULATE = {"llama3.2-1b", "qwen3-moe-235b-a22b", "mamba2-780m"}
+
+#: the registry LM smoke program used for the backend-speedup row
+EXEC_NETWORK = "llama3.2-1b"
 
 
-def run() -> list[tuple[str, float, str]]:
-    rows = []
-    for name, kw in NETWORKS:
-        t0 = time.time()
-        prog = compile_network(name, **kw)
-        compile_s = time.time() - t0
-        t1 = time.time()
-        image = to_binary(prog)
-        pack_s = time.time() - t1
-        s = prog.stats()
-        bench = {
-            "BENCH": "compiler",
-            "network": name,
-            "layers": len(prog.layers),
-            "instructions": s.n_instructions,
-            "by_opcode": s.by_opcode,
-            "image_bytes": len(image),
-            "ddr_footprint_bytes": s.ddr_footprint,
-            "mb_fetched": round(s.bytes_fetched / 1e6, 3),
-            "mb_written": round(s.bytes_written / 1e6, 3),
-            "compile_s": round(compile_s, 4),
-            "pack_s": round(pack_s, 4),
-            "instrs_per_s": int(s.n_instructions / max(compile_s, 1e-9)),
-        }
-        rows.append((f"compiler.{name}", 1e6 * compile_s,
-                     json.dumps(bench, sort_keys=True)))
+def bench_network(name: str, kw: dict) -> tuple[str, float, str]:
+    t0 = time.time()
+    prog = compile_network(name, **kw)
+    compile_s = time.time() - t0
+    t1 = time.time()
+    opt = optimize_program(prog, 1, validate=False)
+    opt_s = time.time() - t1
+    t2 = time.time()
+    image = to_binary(opt)
+    pack_s = time.time() - t2
+    s = prog.stats()
+    bench = {
+        "BENCH": "compiler",
+        "network": name,
+        "layers": len(prog.layers),
+        "instructions": s.n_instructions,
+        "instructions_o1": opt.n_instructions,
+        "passes": [{
+            "name": ps.name,
+            "instrs_before": ps.instrs_before,
+            "instrs_after": ps.instrs_after,
+            **ps.detail,
+        } for ps in opt.opt_stats],
+        "by_opcode": s.by_opcode,
+        "image_bytes": len(image),
+        "ddr_footprint_bytes": s.ddr_footprint,
+        "mb_fetched": round(s.bytes_fetched / 1e6, 3),
+        "mb_written": round(s.bytes_written / 1e6, 3),
+        "compile_s": round(compile_s, 4),
+        "opt_s": round(opt_s, 4),
+        "pack_s": round(pack_s, 4),
+        "instrs_per_s": int(s.n_instructions / max(compile_s, 1e-9)),
+    }
+    if name in SIMULATE:
+        t3 = time.time()
+        c0 = simulate_program(prog).total_cycles
+        c1 = simulate_program(opt).total_cycles
+        bench.update({
+            "sim_cycles_o0": c0,
+            "sim_cycles_o1": c1,
+            "sim_latency_gain_pct": round(100.0 * (c0 - c1) / max(c0, 1), 3),
+            "sim_s": round(time.time() - t3, 4),
+        })
+    return (f"compiler.{name}", 1e6 * compile_s,
+            json.dumps(bench, sort_keys=True))
+
+
+def bench_backends(seq_len: int = 64) -> tuple[str, float, str]:
+    """Golden interpreter vs batched Pallas fast path on one registry
+    LM smoke program: wall clock per full program execution, bit-exact
+    cross-check, speedup."""
+    prog = compile_network(EXEC_NETWORK, seq_len=seq_len, opt_level=1)
+    golden = GoldenExecutor(prog)
+    pallas = PallasExecutor(prog)
+    acts = {}
+    for lp in prog.layers:
+        bind_synthetic(golden, lp)
+        bind_synthetic(pallas, lp)
+        acts[lp.index] = np.random.default_rng(1000 + lp.index).integers(
+            -8, 8, (lp.dims.m, lp.dims.k)).astype(np.int8)
+
+    # warm the fast path once (jit/trace), then time both
+    for lp in prog.layers:
+        pallas.run_layer(lp.index, acts[lp.index])
+    t0 = time.time()
+    outs_g = {lp.index: np.asarray(golden.run_layer(lp.index,
+                                                    acts[lp.index]))
+              for lp in prog.layers}
+    golden_s = time.time() - t0
+    t1 = time.time()
+    outs_p = {lp.index: np.asarray(pallas.run_layer(lp.index,
+                                                    acts[lp.index]))
+              for lp in prog.layers}
+    pallas_s = time.time() - t1
+    bit_exact = all((outs_g[i] == outs_p[i]).all() for i in outs_g)
+    bench = {
+        "BENCH": "compiler.backends",
+        "network": EXEC_NETWORK,
+        "seq_len": seq_len,
+        "layers": len(prog.layers),
+        "golden_s": round(golden_s, 4),
+        "pallas_s": round(pallas_s, 4),
+        "speedup_x": round(golden_s / max(pallas_s, 1e-9), 1),
+        "bit_exact": bool(bit_exact),
+    }
+    return (f"compiler.backends.{EXEC_NETWORK}", 1e6 * pallas_s,
+            json.dumps(bench, sort_keys=True))
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rows = [bench_network(name, kw)
+            for name, kw in (SMOKE_NETWORKS if smoke else NETWORKS)]
+    rows.append(bench_backends(seq_len=16 if smoke else 64))
     return rows
 
 
@@ -58,6 +156,10 @@ def main() -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset for CI (small LM programs only)")
+    args = ap.parse_args()
     writer = csv.writer(sys.stdout)
-    for row in main():
+    for row in run(smoke=args.smoke):
         writer.writerow(row)

@@ -5,11 +5,15 @@ Pipeline::
     configs/registry + core/workloads      (what to run)
         └─ networks.network_layers          → GEMM layer list
             └─ lower.lower_network          → Program (streams + DDR map)
-                ├─ asm.disassemble/assemble → text assembly (bit-exact)
-                ├─ asm.to_binary/from_binary→ packed image (bit-exact)
-                ├─ core.scheduler.simulate_program → Fig. 5 latency
-                └─ executor.GoldenExecutor  → functional outputs, bit-exact
-                                              vs core/hetero_linear.py
+                └─ passes.PassPipeline      → optimized Program (-O1:
+                                              prefetch reorder, sync
+                                              elision, fused result DMA)
+                    ├─ asm.disassemble/assemble → text assembly (bit-exact)
+                    ├─ asm.to_binary/from_binary→ packed image (bit-exact)
+                    ├─ core.scheduler.simulate_program → Fig. 5 latency
+                    └─ runtime.ExecutorBackend  → functional outputs:
+                         runtime.GoldenExecutor   (bit-exact interpreter)
+                         runtime.PallasExecutor   (batched fast path)
 """
 from repro.compiler.asm import (
     assemble,
@@ -18,7 +22,29 @@ from repro.compiler.asm import (
     to_binary,
 )
 from repro.compiler.cli import compile_network
-from repro.compiler.executor import ExecutionError, GoldenExecutor
+from repro.compiler.passes import (
+    O1_PASSES,
+    Pass,
+    PassError,
+    PassPipeline,
+    PassStats,
+    DmaFusionPass,
+    SyncElisionPass,
+    WeightPrefetchPass,
+    optimize_program,
+    pipeline_for,
+)
+from repro.compiler.runtime import (
+    BACKENDS,
+    ExecutionError,
+    ExecutorBackend,
+    GoldenExecutor,
+    LayerWeights,
+    PallasExecutor,
+    UnsupportedLayerError,
+    bind_synthetic,
+    get_backend,
+)
 from repro.compiler.lower import (
     LayerAddrs,
     lower_dsp_layer,
@@ -44,7 +70,13 @@ from repro.compiler.program import (
 
 __all__ = [
     "assemble", "disassemble", "from_binary", "to_binary",
-    "compile_network", "ExecutionError", "GoldenExecutor",
+    "compile_network",
+    "O1_PASSES", "Pass", "PassError", "PassPipeline", "PassStats",
+    "DmaFusionPass", "SyncElisionPass", "WeightPrefetchPass",
+    "optimize_program", "pipeline_for",
+    "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
+    "LayerWeights", "PallasExecutor", "UnsupportedLayerError",
+    "bind_synthetic", "get_backend",
     "LayerAddrs", "lower_dsp_layer", "lower_lut_layer", "lower_network",
     "solve_split_dims", "list_networks", "lm_gemm_layers", "network_layers",
     "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap", "Program",

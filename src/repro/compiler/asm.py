@@ -29,6 +29,11 @@ Sync channel names never need to be stated redundantly — they are
 recoverable from the 3-bit ``token_flag`` via the per-core tables in
 ``program.py`` — but the text spells them out for readability.
 
+Fused DMA bursts (``passes.DmaFusionPass``, -O1) carry their tile
+count in the ``buf`` (``onchip_base``) operand of Fetch/Result lines —
+canonical streams render ``buf=0x0`` there, a fused pair ``buf=0x2`` —
+so optimized programs round-trip through both renderers unchanged.
+
 The binary image is ``N3HPROG1`` + a canonical-JSON metadata section
 (program/device/core configs, memory map, per-layer metadata) followed
 by the packed streams: per (layer, core, engine) a u32 instruction

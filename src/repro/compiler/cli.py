@@ -6,6 +6,8 @@ Examples::
     python -m repro.compiler llama3.2-1b --format asm   # text assembly
     python -m repro.compiler mobilenet_v2 --format bin -o mb2.n3h
     python -m repro.compiler resnet18 --simulate        # + Fig.5 decomposition
+    python -m repro.compiler resnet18 -O 1 --simulate   # optimized streams
+    python -m repro.compiler llama3.2-1b -O 1 --execute --backend pallas
     python -m repro.compiler --list
 """
 from __future__ import annotations
@@ -14,15 +16,20 @@ import argparse
 import sys
 import time
 
+import numpy as np
+
 from repro.core.scheduler import (
     DEVICES,
     DspCoreConfig,
     LutCoreConfig,
     simulate_program,
 )
+from repro.quant.uniform import qrange
 from repro.compiler import asm
 from repro.compiler.lower import lower_network
 from repro.compiler.networks import list_networks, network_layers
+from repro.compiler.passes import OPT_LEVELS
+from repro.compiler.runtime import BACKENDS, bind_synthetic, get_backend
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -45,10 +52,23 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--lut-m", type=int, default=8)
     p.add_argument("--lut-n", type=int, default=16)
     p.add_argument("--lut-k", type=int, default=128)
+    p.add_argument("-O", "--opt", type=int, default=0, choices=OPT_LEVELS,
+                   help="optimization level: 0 = canonical Fig.-3 schedule, "
+                        "1 = passes.py pipeline (prefetch reorder, sync "
+                        "elision, result-DMA fusion)")
+    p.add_argument("--backend", default="golden", choices=sorted(BACKENDS),
+                   help="executor backend for --execute (golden = "
+                        "contract-checking interpreter, pallas = batched "
+                        "fast path)")
     p.add_argument("--format", choices=("summary", "asm", "bin"),
                    default="summary")
     p.add_argument("--simulate", action="store_true",
                    help="also run the event-driven simulator (summary mode)")
+    p.add_argument("--execute", action="store_true",
+                   help="also execute the program functionally with "
+                        "synthetic weights via --backend (summary mode); "
+                        "unsupported (depthwise) layers are skipped and "
+                        "reported")
     p.add_argument("-o", "--output", default=None,
                    help="write asm/bin to a file instead of stdout")
     return p
@@ -57,7 +77,7 @@ def build_parser() -> argparse.ArgumentParser:
 def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
                     bits_a: int = 4, ratio: float | None = None,
                     seq_len: int = 64, lut_m: int = 8, lut_n: int = 16,
-                    lut_k: int = 128):
+                    lut_k: int = 128, opt_level: int = 0):
     """Programmatic entry point used by the CLI, benchmarks and tests."""
     dev = DEVICES[device]
     lut_cfg = LutCoreConfig(m=lut_m, n=lut_n, k=lut_k)
@@ -67,7 +87,8 @@ def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
     if ratio is not None:
         n_luts = [int(round(ratio * gl.dims.n)) for gl in layers]
     return lower_network(name, layers, lut_cfg, dsp_cfg, dev,
-                         bits_w_lut=bits_w, bits_a=bits_a, n_luts=n_luts)
+                         bits_w_lut=bits_w, bits_a=bits_a, n_luts=n_luts,
+                         opt_level=opt_level)
 
 
 def summarize(prog, simulate: bool = False) -> str:
@@ -86,6 +107,14 @@ def summarize(prog, simulate: bool = False) -> str:
     split = [lp.n_lut / max(lp.dims.n, 1) for lp in prog.layers]
     lines.append(f"lut ratio mean={sum(split) / max(len(split), 1):.3f} "
                  f"min={min(split):.3f} max={max(split):.3f}")
+    if prog.opt_stats:
+        total_before = prog.opt_stats[0].instrs_before
+        total_after = prog.opt_stats[-1].instrs_after
+        lines.append(f"passes    {len(prog.opt_stats)} passes, "
+                     f"{total_before} -> {total_after} instrs "
+                     f"(-{total_before - total_after})")
+        for ps in prog.opt_stats:
+            lines.append(f"  {ps.render()}")
     if simulate:
         t0 = time.time()
         ps = simulate_program(prog)
@@ -97,6 +126,39 @@ def summarize(prog, simulate: bool = False) -> str:
             d = ps.decomposition(core)
             lines.append(f"  {core}: wait={d['l_wait']} run={d['l_run']} "
                          f"sig={d['l_sig']} rst={d['l_rst']}")
+    return "\n".join(lines)
+
+
+def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
+    """Run every supported layer functionally with synthetic weights.
+
+    Depthwise layers have no functional executor semantics; they are
+    skipped and reported instead of crashing the whole CNN program.
+    """
+    ex = get_backend(backend)(prog)
+    rng = np.random.default_rng(seed)
+    skipped: list[str] = []
+    checksum = 0.0
+    executed = 0
+    t0 = time.time()
+    for lp in prog.layers:
+        if lp.depthwise:
+            skipped.append(lp.name)
+            continue
+        bind_synthetic(ex, lp, seed=seed + lp.index)
+        lo_a, hi_a = qrange(lp.bits_a)
+        x_q = rng.integers(lo_a, hi_a + 1,
+                           (lp.dims.m, lp.dims.k)).astype(np.int8)
+        out = np.asarray(ex.run_layer(lp.index, x_q))
+        checksum += float(np.abs(out).sum())
+        executed += 1
+    dt = time.time() - t0
+    lines = [f"executed  {executed}/{len(prog.layers)} layers via "
+             f"{backend} backend in {dt:.3f}s (|out| sum {checksum:.6e})"]
+    if skipped:
+        names = ", ".join(skipped[:6]) + (" ..." if len(skipped) > 6 else "")
+        lines.append(f"skipped   {len(skipped)} unsupported depthwise "
+                     f"layer(s): {names}")
     return "\n".join(lines)
 
 
@@ -117,7 +179,8 @@ def main(argv: list[str] | None = None) -> int:
         prog = compile_network(
             args.network, device=args.device, bits_w=args.bits_w,
             bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
-            lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k)
+            lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k,
+            opt_level=args.opt)
     except (KeyError, ValueError) as e:
         msg = e.args[0] if e.args else e
         print(f"error: {msg}", file=sys.stderr)
@@ -125,6 +188,8 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.format == "summary":
         print(summarize(prog, simulate=args.simulate))
+        if args.execute:
+            print(execute_report(prog, backend=args.backend))
         return 0
     if args.format == "asm":
         text = asm.disassemble(prog)

@@ -1,288 +1,24 @@
-"""Golden-model interpreter for compiled Programs.
+"""Back-compat shim — the executor moved to ``repro.compiler.runtime``.
 
-Executes a :class:`~repro.compiler.program.Program` *functionally*: the
-instruction streams drive real data movement and tile GEMMs against the
-reference numerics of ``kernels/ref.py`` — bitplane (bit-serial)
-arithmetic for LUT-core partitions, packed-int4 for DSP-core partitions
-— so the result is bit-exact against ``core/hetero_linear.py``'s
-deployed integer path on the same codes/scales.
-
-The interpreter enforces the ISA contract along the way:
-
-  * Fetch instructions must address the layer's DDR segments from the
-    program's memory map (weights at ``L{i}.wgt.{core}``, activations
-    at the previous layer's output segment);
-  * every Execute must only consume weight tiles a prior Fetch brought
-    on chip, and the tile count must cover the partition exactly;
-  * Result instructions place output tiles by their DDR offset and must
-    tile the output without overlap;
-  * the sync-token protocol is validated by running the event-driven
-    scheduler over the same streams (a deadlock there is an executor
-    error here).
-
-Depthwise layers are latency-modeled by the scheduler but have no
-functional GEMM semantics in the executor yet (each output channel sees
-a different im2col slice); ``run_layer`` raises for them.
+The golden interpreter now lives in ``runtime/golden.py`` behind the
+:class:`~repro.compiler.runtime.base.ExecutorBackend` interface, next
+to the batched Pallas fast path (``runtime/pallas.py``). Import from
+``repro.compiler.runtime`` (or ``repro.compiler``) in new code; this
+module keeps the historical import path working.
 """
-from __future__ import annotations
-
-import dataclasses
-import math
-
-import jax.numpy as jnp
-
-from repro.core import isa
-from repro.core.scheduler import simulate
-from repro.kernels import ops as kops
-from repro.kernels import ref as kref
-from repro.quant.uniform import fit_scale, qrange
-from repro.compiler.program import (
-    CORE_NAMES,
-    CoreProgram,
-    LayerProgram,
-    Program,
+from repro.compiler.runtime import (
+    BACKENDS,
+    ExecutionError,
+    ExecutorBackend,
+    GoldenExecutor,
+    LayerWeights,
+    PallasExecutor,
+    UnsupportedLayerError,
+    get_backend,
 )
 
-
-class ExecutionError(RuntimeError):
-    """An instruction stream violated the ISA/program contract."""
-
-
-@dataclasses.dataclass
-class LayerWeights:
-    """Integer weight codes + per-column dequant scales for one layer,
-    already split: LUT (bit-serial) columns first, DSP (int4) columns
-    after — the same column order ``hetero_gemm_ref`` concatenates."""
-    w_lut: jnp.ndarray | None      # [k, n_lut] int32 codes
-    s_lut: jnp.ndarray | None      # [n_lut] fp32
-    w_dsp: jnp.ndarray | None      # [k, n_dsp] int32 codes (int4 range)
-    s_dsp: jnp.ndarray | None      # [n_dsp] fp32
-
-
-class GoldenExecutor:
-    """Functional interpreter over a compiled program."""
-
-    def __init__(self, program: Program, check_timing: bool = True):
-        self.program = program
-        self.check_timing = check_timing
-        self._weights: dict[int, LayerWeights] = {}
-
-    # -- weight binding ----------------------------------------------------
-
-    def bind_layer(self, index: int, w_lut=None, s_lut=None,
-                   w_dsp=None, s_dsp=None) -> None:
-        lp = self.program.layers[index]
-        k, n_lut, n_dsp = lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut
-
-        def _chk(w, s, n, what, bits):
-            if n == 0:
-                if w is not None:
-                    raise ValueError(f"layer {index} has no {what} partition")
-                return None, None
-            w = jnp.asarray(w, jnp.int32)
-            s = jnp.asarray(s, jnp.float32).reshape(-1)
-            if w.shape != (k, n) or s.shape != (n,):
-                raise ValueError(
-                    f"layer {index} {what} weights must be [{k},{n}] "
-                    f"(+[{n}] scales), got {w.shape}/{s.shape}")
-            lo, hi = qrange(bits)
-            if int(w.min()) < lo or int(w.max()) > hi:
-                raise ValueError(f"layer {index} {what} codes exceed "
-                                 f"{bits}-bit range [{lo},{hi}]")
-            return w, s
-
-        w_lut, s_lut = _chk(w_lut, s_lut, n_lut, "lut", lp.bits_w_lut)
-        w_dsp, s_dsp = _chk(w_dsp, s_dsp, n_dsp, "dsp", 4)
-        self._weights[index] = LayerWeights(w_lut, s_lut, w_dsp, s_dsp)
-
-    def bind_deployed(self, index: int, deployed) -> None:
-        """Bind from a ``hetero_linear.DeployedHeteroLinear`` (its column
-        order is already LUT-first, matching the program split)."""
-        lp = self.program.layers[index]
-        self.bind_layer(
-            index,
-            w_lut=deployed.wq_serial if lp.n_lut else None,
-            s_lut=deployed.s_serial if lp.n_lut else None,
-            w_dsp=deployed.wq_parallel if lp.n_dsp else None,
-            s_dsp=deployed.s_parallel if lp.n_dsp else None)
-
-    # -- execution ---------------------------------------------------------
-
-    def run_layer(self, index: int, x_q) -> jnp.ndarray:
-        """Execute one layer's streams on int8 activations ``x_q`` [m, k].
-
-        Returns fp32 [m, n] in split column order (LUT partition first),
-        i.e. exactly ``kernels.ref.hetero_gemm_ref``'s layout.
-        """
-        lp = self.program.layers[index]
-        if lp.depthwise:
-            raise NotImplementedError(
-                "depthwise layers have no functional executor semantics")
-        if index not in self._weights:
-            raise ExecutionError(f"layer {index} has no bound weights")
-        x_q = jnp.asarray(x_q, jnp.int8)
-        if x_q.shape != (lp.dims.m, lp.dims.k):
-            raise ExecutionError(
-                f"activations must be [{lp.dims.m},{lp.dims.k}], "
-                f"got {x_q.shape}")
-        wts = self._weights[index]
-
-        outs = []
-        if lp.lut is not None:
-            outs.append(self._run_core(lp, lp.lut, x_q, wts.w_lut, wts.s_lut))
-        if lp.dsp is not None:
-            outs.append(self._run_core(lp, lp.dsp, x_q, wts.w_dsp, wts.s_dsp))
-        return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
-
-    def run(self, x_q) -> jnp.ndarray:
-        """Chain all layers (FC-style networks whose GEMMs compose:
-        n_i == k_{i+1}). Activations are requantized to each layer's
-        ``bits_a`` between layers, as the hardware writes them back."""
-        out = None
-        for lp in self.program.layers:
-            if out is not None:
-                if out.shape[1] != lp.dims.k or out.shape[0] != lp.dims.m:
-                    raise ExecutionError(
-                        f"layer {lp.index} expects [{lp.dims.m},{lp.dims.k}] "
-                        f"activations but layer {lp.index - 1} produced "
-                        f"{tuple(out.shape)}; run_layer() drives "
-                        f"non-chaining (conv) programs layer by layer")
-                s_a = fit_scale(out, lp.bits_a)
-                lo, hi = qrange(lp.bits_a)
-                x_q = jnp.clip(jnp.round(out / s_a), lo, hi).astype(jnp.int8)
-            out = self.run_layer(lp.index, x_q)
-        return out
-
-    # -- core interpretation ----------------------------------------------
-
-    def _segments(self, lp: LayerProgram, core_name: str):
-        mem = self.program.memory
-        wgt = mem[f"L{lp.index}.wgt.{core_name}"]
-        act = mem["act.in"] if lp.index == 0 else mem[f"L{lp.index - 1}.out"]
-        out = mem[f"L{lp.index}.out"]
-        return wgt, act, out
-
-    def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
-                  w_codes, w_scales) -> jnp.ndarray:
-        if self.check_timing:
-            try:
-                simulate(cp.streams, cp.sim_tokens())
-            except RuntimeError as e:
-                raise ExecutionError(
-                    f"layer {lp.index} {CORE_NAMES[cp.core]} streams deadlock: {e}"
-                ) from e
-
-        core_name = CORE_NAMES[cp.core]
-        g_n = w_codes.shape[1]
-        if core_name == "lut":
-            tm, tn = self.program.lut_cfg.m, self.program.lut_cfg.n
-            bits = lp.bits_w_lut
-        else:
-            tm, tn = self.program.dsp_cfg.n_reg_row_a, \
-                self.program.dsp_cfg.n_reg_col_w
-            bits = 4
-        m = lp.dims.m
-        nt_m = math.ceil(m / tm)
-        nt_n = math.ceil(g_n / tn)
-        wgt_seg, act_seg, out_seg = self._segments(lp, core_name)
-
-        # 1. Fetch stream: record what lands on chip, check addressing.
-        fetched_wtiles: set[int] = set()
-        n_wgt_fetches = 0
-        act_loaded = False
-        for op in cp.streams["fetch"]:
-            i = op.instr
-            if not isinstance(i, isa.FetchInstr):
-                continue
-            if i.stage_ctrl == 0:                    # weight tile / wall
-                if i.ddr_base != wgt_seg.base:
-                    raise ExecutionError(
-                        f"L{lp.index} {core_name}: weight fetch addresses "
-                        f"{i.ddr_base:#x}, expected segment "
-                        f"{wgt_seg.name}@{wgt_seg.base:#x}")
-                n_wgt_fetches += 1
-                fetched_wtiles.add(i.ddr_offset)
-            elif i.stage_ctrl == 1:                  # activations
-                if i.ddr_base != act_seg.base:
-                    raise ExecutionError(
-                        f"L{lp.index} {core_name}: activation fetch addresses "
-                        f"{i.ddr_base:#x}, expected segment "
-                        f"{act_seg.name}@{act_seg.base:#x}")
-                act_loaded = True
-            else:
-                raise ExecutionError(
-                    f"L{lp.index} {core_name}: fetch stage_ctrl="
-                    f"{i.stage_ctrl} is not a defined buffer stage")
-        if not act_loaded:
-            raise ExecutionError(
-                f"L{lp.index} {core_name}: no activation fetch in stream")
-        # DSP whole-weight residency: a single stage-0 fetch at offset 0
-        # DMAs the entire weight matrix, covering every column tile.
-        if core_name == "dsp" and n_wgt_fetches == 1 and 0 in fetched_wtiles:
-            fetched_wtiles.update(range(nt_n))
-
-        # 2. Execute stream: tile GEMMs through the reference numerics.
-        tiles: dict[int, jnp.ndarray] = {}
-        t = 0
-        for op in cp.streams["execute"]:
-            i = op.instr
-            if not isinstance(i, isa.ExecuteInstr):
-                continue
-            if core_name == "lut":
-                j, ti = divmod(t, nt_m)              # column-major schedule
-            else:
-                ti, j = divmod(t, nt_n)              # row-major schedule
-            if j not in fetched_wtiles:
-                raise ExecutionError(
-                    f"L{lp.index} {core_name}: execute consumes weight tile "
-                    f"{j} before any fetch brought it on chip")
-            r0, r1 = ti * tm, min((ti + 1) * tm, m)
-            c0, c1 = j * tn, min((j + 1) * tn, g_n)
-            if core_name == "lut":
-                tile = kref.bitserial_gemm_ref(
-                    x_q[r0:r1], w_codes[:, c0:c1], w_scales[c0:c1], bits)
-            else:
-                tile = kops.int4_matmul(
-                    x_q[r0:r1], w_codes[:, c0:c1], w_scales[c0:c1],
-                    mode="ref")
-            tiles[(j * nt_m + ti) if core_name == "lut"
-                  else (ti * nt_n + j)] = tile
-            t += 1
-        if t != nt_m * nt_n:
-            raise ExecutionError(
-                f"L{lp.index} {core_name}: {t} execute instructions do not "
-                f"tile the [{m},{g_n}] partition ({nt_m}x{nt_n} expected)")
-
-        # 3. Result stream: drain tiles to the output DDR segment.
-        out = jnp.zeros((m, g_n), jnp.float32)
-        placed: set[int] = set()
-        for op in cp.streams["result"]:
-            i = op.instr
-            if not isinstance(i, isa.ResultInstr):
-                continue
-            if i.ddr_base != out_seg.base:
-                raise ExecutionError(
-                    f"L{lp.index} {core_name}: result writes {i.ddr_base:#x},"
-                    f" expected segment {out_seg.name}@{out_seg.base:#x}")
-            off = i.ddr_offset
-            if off in placed:
-                raise ExecutionError(
-                    f"L{lp.index} {core_name}: result tile {off} written "
-                    f"twice")
-            if off not in tiles:
-                raise ExecutionError(
-                    f"L{lp.index} {core_name}: result drains tile {off} "
-                    f"which was never executed")
-            placed.add(off)
-            if core_name == "lut":
-                j, ti = divmod(off, nt_m)
-            else:
-                ti, j = divmod(off, nt_n)
-            r0, r1 = ti * tm, min((ti + 1) * tm, m)
-            c0, c1 = j * tn, min((j + 1) * tn, g_n)
-            out = out.at[r0:r1, c0:c1].set(tiles[off])
-        if len(placed) != nt_m * nt_n:
-            raise ExecutionError(
-                f"L{lp.index} {core_name}: result stream drained "
-                f"{len(placed)}/{nt_m * nt_n} tiles")
-        return out
+__all__ = [
+    "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
+    "LayerWeights", "PallasExecutor", "UnsupportedLayerError",
+    "get_backend",
+]

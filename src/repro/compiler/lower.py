@@ -19,7 +19,10 @@ program images all consume the exact same streams.
 ``lower_network`` walks a whole layer list through the neuron split
 (Eq. 12) and packages everything as a :class:`Program` with a DDR
 memory map and inter-layer barrier tokens (inter-layer synchronous,
-intra-layer asynchronous — §3.1).
+intra-layer asynchronous — §3.1). It emits the *canonical* Fig.-3
+schedule; ``opt_level >= 1`` then runs the program-level optimization
+pipeline of ``passes.py`` (weight-tile prefetch reordering, sync
+elision, fused result DMA pairs) over the lowered streams.
 """
 from __future__ import annotations
 
@@ -317,7 +320,8 @@ def lower_network(name: str, layers: list[GemmLayer],
                   dev: FPGADevice,
                   bits_w_lut: int | list[int] = 4,
                   bits_a: int | list[int] = 4,
-                  n_luts: list[int] | None = None) -> Program:
+                  n_luts: list[int] | None = None,
+                  opt_level: int = 0) -> Program:
     """Compile a whole network into a :class:`Program`.
 
     Per layer: pick the neuron split (given ``n_luts`` or solved via
@@ -327,6 +331,10 @@ def lower_network(name: str, layers: list[GemmLayer],
     Layers are chained inter-layer synchronously: each core's fetch
     stream for layer i>0 opens with a barrier wait matched by a barrier
     send at the tail of its layer i-1 result stream.
+
+    ``opt_level=0`` returns the canonical schedule; ``opt_level=1``
+    additionally runs the ``passes.py`` optimization pipeline (the
+    per-pass accounting lands on ``Program.opt_stats``).
     """
     nl = len(layers)
     bw = list(bits_w_lut) if isinstance(bits_w_lut, (list, tuple)) \
@@ -389,5 +397,10 @@ def lower_network(name: str, layers: list[GemmLayer],
             p_cp.streams["result"].append(send)
             c_cp.streams["fetch"].insert(0, wait)
 
-    return Program(name=name, device=dev, lut_cfg=lut_cfg, dsp_cfg=dsp_cfg,
+    prog = Program(name=name, device=dev, lut_cfg=lut_cfg, dsp_cfg=dsp_cfg,
                    layers=progs, memory=mem)
+    if opt_level:
+        # deferred import: passes.py consumes Program, not the lowerer
+        from repro.compiler.passes import optimize_program
+        prog = optimize_program(prog, opt_level, copy_program=False)
+    return prog

@@ -231,6 +231,9 @@ class Program:
     dsp_cfg: DspCoreConfig
     layers: list[LayerProgram]
     memory: MemoryMap
+    # Per-pass accounting attached by passes.PassPipeline (not part of
+    # the program identity: excluded from __eq__ and serialization).
+    opt_stats: list = dataclasses.field(default_factory=list, repr=False)
 
     def stats(self) -> ProgramStats:
         by_op = {op.name: 0 for op in isa.Opcode}

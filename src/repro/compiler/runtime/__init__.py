@@ -1,0 +1,44 @@
+"""Pluggable executor backends for compiled Programs.
+
+  base.py    — :class:`ExecutorBackend` interface + shared binding,
+               validation, chaining; error taxonomy.
+  golden.py  — :class:`GoldenExecutor`: contract-checking reference
+               interpreter (bit-exact vs ``core/hetero_linear.py``).
+  pallas.py  — :class:`PallasExecutor`: batched fast path, one
+               ``kernels`` GEMM call per layer partition.
+
+Select by name via :func:`get_backend` (the CLI's ``--backend`` flag
+resolves here). To add a backend: subclass ``ExecutorBackend``,
+implement ``_run_core``, and register it in :data:`BACKENDS`.
+"""
+from repro.compiler.runtime.base import (
+    ExecutionError,
+    ExecutorBackend,
+    LayerWeights,
+    UnsupportedLayerError,
+    bind_synthetic,
+)
+from repro.compiler.runtime.golden import GoldenExecutor
+from repro.compiler.runtime.pallas import PallasExecutor
+
+BACKENDS: dict[str, type[ExecutorBackend]] = {
+    GoldenExecutor.name: GoldenExecutor,
+    PallasExecutor.name: PallasExecutor,
+}
+
+
+def get_backend(name: str) -> type[ExecutorBackend]:
+    """Resolve an executor backend class by registry name."""
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor backend {name!r}; available: "
+            f"{sorted(BACKENDS)}") from None
+
+
+__all__ = [
+    "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
+    "LayerWeights", "PallasExecutor", "UnsupportedLayerError",
+    "bind_synthetic", "get_backend",
+]

@@ -1,0 +1,205 @@
+"""Executor backend interface for compiled Programs.
+
+A backend executes a :class:`~repro.compiler.program.Program`
+*functionally* — integer activations in, fp32 split-order outputs out —
+against real weight codes and dequant scales. Two implementations ship:
+
+  * ``runtime/golden.py`` — the reference interpreter: walks the
+    instruction streams tile by tile, enforcing the ISA/program
+    contract along the way (bit-exact, slow);
+  * ``runtime/pallas.py`` — the batched fast path: one
+    ``kernels.bitserial_matmul`` / ``kernels.int4_matmul`` call per
+    layer partition (bit-identical outputs, orders of magnitude faster,
+    Pallas kernels on TPU).
+
+This module holds everything backends share: weight binding and
+validation, activation checks, layer chaining with inter-layer
+requantization, and the error taxonomy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import simulate
+from repro.quant.uniform import fit_scale, qrange
+from repro.compiler.program import CORE_NAMES, CoreProgram, LayerProgram, \
+    Program
+
+
+class ExecutionError(RuntimeError):
+    """An instruction stream violated the ISA/program contract."""
+
+
+class UnsupportedLayerError(ExecutionError, NotImplementedError):
+    """The layer is latency-modeled but has no functional executor
+    semantics (today: depthwise convolutions, whose output channels
+    each see a different im2col slice).
+
+    Subclasses ``NotImplementedError`` so historical callers that
+    caught that keep working; new callers (the CLI's skip-and-report
+    path, batch runners) should catch this type specifically.
+    """
+
+
+@dataclasses.dataclass
+class LayerWeights:
+    """Integer weight codes + per-column dequant scales for one layer,
+    already split: LUT (bit-serial) columns first, DSP (int4) columns
+    after — the same column order ``hetero_gemm_ref`` concatenates."""
+    w_lut: jnp.ndarray | None      # [k, n_lut] int32 codes
+    s_lut: jnp.ndarray | None      # [n_lut] fp32
+    w_dsp: jnp.ndarray | None      # [k, n_dsp] int32 codes (int4 range)
+    s_dsp: jnp.ndarray | None      # [n_dsp] fp32
+
+
+class ExecutorBackend:
+    """Functional executor over a compiled program.
+
+    Subclasses implement :meth:`_run_core` — how one layer partition's
+    tiles are actually computed. Everything else (binding, validation,
+    chaining) is shared so backends are interchangeable and
+    bit-comparable.
+    """
+
+    #: registry key; subclasses override ("golden", "pallas", ...)
+    name = "base"
+
+    def __init__(self, program: Program, check_timing: bool = True):
+        self.program = program
+        self.check_timing = check_timing
+        self._weights: dict[int, LayerWeights] = {}
+
+    # -- weight binding ----------------------------------------------------
+
+    def bind_layer(self, index: int, w_lut=None, s_lut=None,
+                   w_dsp=None, s_dsp=None) -> None:
+        lp = self.program.layers[index]
+        k, n_lut, n_dsp = lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut
+
+        def _chk(w, s, n, what, bits):
+            if n == 0:
+                if w is not None:
+                    raise ValueError(f"layer {index} has no {what} partition")
+                return None, None
+            w = jnp.asarray(w, jnp.int32)
+            s = jnp.asarray(s, jnp.float32).reshape(-1)
+            if w.shape != (k, n) or s.shape != (n,):
+                raise ValueError(
+                    f"layer {index} {what} weights must be [{k},{n}] "
+                    f"(+[{n}] scales), got {w.shape}/{s.shape}")
+            lo, hi = qrange(bits)
+            if int(w.min()) < lo or int(w.max()) > hi:
+                raise ValueError(f"layer {index} {what} codes exceed "
+                                 f"{bits}-bit range [{lo},{hi}]")
+            return w, s
+
+        w_lut, s_lut = _chk(w_lut, s_lut, n_lut, "lut", lp.bits_w_lut)
+        w_dsp, s_dsp = _chk(w_dsp, s_dsp, n_dsp, "dsp", 4)
+        self._weights[index] = LayerWeights(w_lut, s_lut, w_dsp, s_dsp)
+
+    def bind_deployed(self, index: int, deployed) -> None:
+        """Bind from a ``hetero_linear.DeployedHeteroLinear`` (its column
+        order is already LUT-first, matching the program split)."""
+        lp = self.program.layers[index]
+        self.bind_layer(
+            index,
+            w_lut=deployed.wq_serial if lp.n_lut else None,
+            s_lut=deployed.s_serial if lp.n_lut else None,
+            w_dsp=deployed.wq_parallel if lp.n_dsp else None,
+            s_dsp=deployed.s_parallel if lp.n_dsp else None)
+
+    # -- execution ---------------------------------------------------------
+
+    def run_layer(self, index: int, x_q) -> jnp.ndarray:
+        """Execute one layer on int8 activations ``x_q`` [m, k].
+
+        Returns fp32 [m, n] in split column order (LUT partition first),
+        i.e. exactly ``kernels.ref.hetero_gemm_ref``'s layout.
+        """
+        lp = self.program.layers[index]
+        if lp.depthwise:
+            raise UnsupportedLayerError(
+                f"layer {index} ({lp.name}) is depthwise: no functional "
+                f"executor semantics (each output channel sees a "
+                f"different im2col slice)")
+        if index not in self._weights:
+            raise ExecutionError(f"layer {index} has no bound weights")
+        x_q = jnp.asarray(x_q, jnp.int8)
+        if x_q.shape != (lp.dims.m, lp.dims.k):
+            raise ExecutionError(
+                f"activations must be [{lp.dims.m},{lp.dims.k}], "
+                f"got {x_q.shape}")
+        wts = self._weights[index]
+
+        outs = []
+        if lp.lut is not None:
+            self._check_stream(lp, lp.lut)
+            outs.append(self._run_core(lp, lp.lut, x_q, wts.w_lut, wts.s_lut))
+        if lp.dsp is not None:
+            self._check_stream(lp, lp.dsp)
+            outs.append(self._run_core(lp, lp.dsp, x_q, wts.w_dsp, wts.s_dsp))
+        return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+    def _check_stream(self, lp: LayerProgram, cp: CoreProgram) -> None:
+        """Validate the sync-token protocol (when ``check_timing``) by
+        running the event-driven scheduler over the core's streams."""
+        if not self.check_timing:
+            return
+        try:
+            simulate(cp.streams, cp.sim_tokens())
+        except RuntimeError as e:
+            raise ExecutionError(
+                f"layer {lp.index} {CORE_NAMES[cp.core]} streams "
+                f"deadlock: {e}") from e
+
+    def run(self, x_q) -> jnp.ndarray:
+        """Chain all layers (FC-style networks whose GEMMs compose:
+        n_i == k_{i+1}). Activations are requantized to each layer's
+        ``bits_a`` between layers, as the hardware writes them back."""
+        out = None
+        for lp in self.program.layers:
+            if out is not None:
+                if out.shape[1] != lp.dims.k or out.shape[0] != lp.dims.m:
+                    raise ExecutionError(
+                        f"layer {lp.index} expects [{lp.dims.m},{lp.dims.k}] "
+                        f"activations but layer {lp.index - 1} produced "
+                        f"{tuple(out.shape)}; run_layer() drives "
+                        f"non-chaining (conv) programs layer by layer")
+                s_a = fit_scale(out, lp.bits_a)
+                lo, hi = qrange(lp.bits_a)
+                x_q = jnp.clip(jnp.round(out / s_a), lo, hi).astype(jnp.int8)
+            out = self.run_layer(lp.index, x_q)
+        return out
+
+    # -- backend hook ------------------------------------------------------
+
+    def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
+                  w_codes, w_scales) -> jnp.ndarray:
+        """Compute one layer partition's [m, n_part] fp32 output."""
+        raise NotImplementedError
+
+
+def bind_synthetic(ex: ExecutorBackend, lp: LayerProgram,
+                   seed: int | None = None) -> None:
+    """Bind deterministic synthetic weight codes/scales for one layer.
+
+    Shared by the CLI ``--execute`` path, the executor benchmark and the
+    pass-invariance tests, so the bind_layer contract has one call site
+    to keep current. Codes span each partition's full quantized range;
+    scales are a 0.5..1.5 ramp so column mixups cannot cancel out.
+    """
+    rng = np.random.default_rng(lp.index if seed is None else seed)
+    k, n_lut, n_dsp = lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut
+    lo_w, hi_w = qrange(lp.bits_w_lut)
+    lo_d, hi_d = qrange(4)
+    ex.bind_layer(
+        lp.index,
+        w_lut=rng.integers(lo_w, hi_w + 1, (k, n_lut)) if n_lut else None,
+        s_lut=np.linspace(0.5, 1.5, n_lut, dtype=np.float32)
+        if n_lut else None,
+        w_dsp=rng.integers(lo_d, hi_d + 1, (k, n_dsp)) if n_dsp else None,
+        s_dsp=np.linspace(0.5, 1.5, n_dsp, dtype=np.float32)
+        if n_dsp else None)

@@ -1,0 +1,176 @@
+"""Golden-model interpreter backend (the reference executor).
+
+Executes a compiled program *instruction by instruction*: the streams
+drive real data movement and tile GEMMs against the reference numerics
+of ``kernels/ref.py`` — bitplane (bit-serial) arithmetic for LUT-core
+partitions, packed-int4 for DSP-core partitions — so the result is
+bit-exact against ``core/hetero_linear.py``'s deployed integer path on
+the same codes/scales.
+
+The interpreter enforces the ISA contract along the way:
+
+  * Fetch instructions must address the layer's DDR segments from the
+    program's memory map (weights at ``L{i}.wgt.{core}``, activations
+    at the previous layer's output segment);
+  * every Execute must only consume weight tiles a prior Fetch brought
+    on chip, and the tile count must cover the partition exactly;
+  * Result instructions place output tiles by their DDR offset and must
+    tile the output without overlap — a fused Result burst
+    (``passes.DmaFusionPass``) drains ``max(1, onchip_base)``
+    consecutive tiles;
+  * the sync-token protocol is validated by running the event-driven
+    scheduler over the same streams (a deadlock there is an executor
+    error here).
+
+This is the slow path: a Python loop per tile plus the per-core
+simulation check. Use ``runtime/pallas.py`` to execute large programs
+at speed.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.compiler.program import CORE_NAMES, CoreProgram, LayerProgram
+from repro.compiler.runtime.base import ExecutionError, ExecutorBackend
+
+
+class GoldenExecutor(ExecutorBackend):
+    """Contract-checking functional interpreter over a compiled program."""
+
+    name = "golden"
+
+    # -- core interpretation ----------------------------------------------
+
+    def _segments(self, lp: LayerProgram, core_name: str):
+        mem = self.program.memory
+        wgt = mem[f"L{lp.index}.wgt.{core_name}"]
+        act = mem["act.in"] if lp.index == 0 else mem[f"L{lp.index - 1}.out"]
+        out = mem[f"L{lp.index}.out"]
+        return wgt, act, out
+
+    def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
+                  w_codes, w_scales) -> jnp.ndarray:
+        core_name = CORE_NAMES[cp.core]
+        g_n = w_codes.shape[1]
+        if core_name == "lut":
+            tm, tn = self.program.lut_cfg.m, self.program.lut_cfg.n
+            bits = lp.bits_w_lut
+        else:
+            tm, tn = self.program.dsp_cfg.n_reg_row_a, \
+                self.program.dsp_cfg.n_reg_col_w
+            bits = 4
+        m = lp.dims.m
+        nt_m = math.ceil(m / tm)
+        nt_n = math.ceil(g_n / tn)
+        wgt_seg, act_seg, out_seg = self._segments(lp, core_name)
+
+        # 1. Fetch stream: record what lands on chip, check addressing.
+        fetched_wtiles: set[int] = set()
+        n_wgt_fetches = 0
+        act_loaded = False
+        for op in cp.streams["fetch"]:
+            i = op.instr
+            if not isinstance(i, isa.FetchInstr):
+                continue
+            if i.stage_ctrl == 0:                    # weight tile / wall
+                if i.ddr_base != wgt_seg.base:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: weight fetch addresses "
+                        f"{i.ddr_base:#x}, expected segment "
+                        f"{wgt_seg.name}@{wgt_seg.base:#x}")
+                n_wgt_fetches += 1
+                # a fused burst (passes.DmaFusionPass) lands
+                # max(1, onchip_base) consecutive tiles
+                fetched_wtiles.update(range(
+                    i.ddr_offset, i.ddr_offset + max(1, i.onchip_base)))
+            elif i.stage_ctrl == 1:                  # activations
+                if i.ddr_base != act_seg.base:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: activation fetch addresses "
+                        f"{i.ddr_base:#x}, expected segment "
+                        f"{act_seg.name}@{act_seg.base:#x}")
+                act_loaded = True
+            else:
+                raise ExecutionError(
+                    f"L{lp.index} {core_name}: fetch stage_ctrl="
+                    f"{i.stage_ctrl} is not a defined buffer stage")
+        if not act_loaded:
+            raise ExecutionError(
+                f"L{lp.index} {core_name}: no activation fetch in stream")
+        # DSP whole-weight residency: a single stage-0 fetch at offset 0
+        # DMAs the entire weight matrix, covering every column tile.
+        if core_name == "dsp" and n_wgt_fetches == 1 and 0 in fetched_wtiles:
+            fetched_wtiles.update(range(nt_n))
+
+        # 2. Execute stream: tile GEMMs through the reference numerics.
+        tiles: dict[int, jnp.ndarray] = {}
+        t = 0
+        for op in cp.streams["execute"]:
+            i = op.instr
+            if not isinstance(i, isa.ExecuteInstr):
+                continue
+            if core_name == "lut":
+                j, ti = divmod(t, nt_m)              # column-major schedule
+            else:
+                ti, j = divmod(t, nt_n)              # row-major schedule
+            if j not in fetched_wtiles:
+                raise ExecutionError(
+                    f"L{lp.index} {core_name}: execute consumes weight tile "
+                    f"{j} before any fetch brought it on chip")
+            r0, r1 = ti * tm, min((ti + 1) * tm, m)
+            c0, c1 = j * tn, min((j + 1) * tn, g_n)
+            if core_name == "lut":
+                tile = kref.bitserial_gemm_ref(
+                    x_q[r0:r1], w_codes[:, c0:c1], w_scales[c0:c1], bits)
+            else:
+                tile = kops.int4_matmul(
+                    x_q[r0:r1], w_codes[:, c0:c1], w_scales[c0:c1],
+                    mode="ref")
+            tiles[(j * nt_m + ti) if core_name == "lut"
+                  else (ti * nt_n + j)] = tile
+            t += 1
+        if t != nt_m * nt_n:
+            raise ExecutionError(
+                f"L{lp.index} {core_name}: {t} execute instructions do not "
+                f"tile the [{m},{g_n}] partition ({nt_m}x{nt_n} expected)")
+
+        # 3. Result stream: drain tiles to the output DDR segment. A
+        # fused burst drains max(1, onchip_base) consecutive tiles.
+        out = jnp.zeros((m, g_n), jnp.float32)
+        placed: set[int] = set()
+        for op in cp.streams["result"]:
+            i = op.instr
+            if not isinstance(i, isa.ResultInstr):
+                continue
+            if i.ddr_base != out_seg.base:
+                raise ExecutionError(
+                    f"L{lp.index} {core_name}: result writes {i.ddr_base:#x},"
+                    f" expected segment {out_seg.name}@{out_seg.base:#x}")
+            burst = max(1, i.onchip_base)
+            for off in range(i.ddr_offset, i.ddr_offset + burst):
+                if off in placed:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: result tile {off} written "
+                        f"twice")
+                if off not in tiles:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: result drains tile {off} "
+                        f"which was never executed")
+                placed.add(off)
+                if core_name == "lut":
+                    j, ti = divmod(off, nt_m)
+                else:
+                    ti, j = divmod(off, nt_n)
+                r0, r1 = ti * tm, min((ti + 1) * tm, m)
+                c0, c1 = j * tn, min((j + 1) * tn, g_n)
+                out = out.at[r0:r1, c0:c1].set(tiles[off])
+        if len(placed) != nt_m * nt_n:
+            raise ExecutionError(
+                f"L{lp.index} {core_name}: result stream drained "
+                f"{len(placed)}/{nt_m * nt_n} tiles")
+        return out

@@ -1,0 +1,54 @@
+"""Batched executor backend — the Pallas fast path.
+
+The golden interpreter loops a Python iteration per tile (plus a
+per-core scheduler validation), which makes large registry LM programs
+unusably slow to execute. This backend exploits that a layer
+partition's tile grid computes a plain GEMM: all tiles of a partition
+are grouped into a *single* ``kernels.bitserial_matmul`` /
+``kernels.int4_matmul`` call over the whole [m, k] x [k, n_part]
+extent.
+
+Bit-exactness: both kernels accumulate in exact int32 (bitplane or
+packed-int4 arithmetic) and apply per-column fp32 scales elementwise,
+so the batched product equals the golden interpreter's tile-by-tile
+assembly bit for bit — row/column tiling of an exact integer GEMM is
+associative, and the dequant scale is per output element. The
+pass-invariance suite (``tests/test_compiler_passes.py``) pins this.
+
+On TPU the grouped calls dispatch the actual Pallas kernels
+(``kernels/bitserial_gemm.py`` / ``kernels/int4_gemm.py``); on CPU they
+fall back to the vectorized jnp oracles — still orders of magnitude
+faster than the interpreter's per-tile loop. ``mode`` is forwarded to
+the kernel wrappers ("auto" | "kernel" | "ref").
+
+Timing/contract checks are *off* by default here (that is the golden
+backend's job); pass ``check_timing=True`` to keep the per-core
+scheduler validation (``ExecutorBackend._check_stream``) on the fast
+path too.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.kernels import ops as kops
+from repro.compiler.program import CoreProgram, LayerProgram
+from repro.compiler.runtime.base import ExecutorBackend
+
+
+class PallasExecutor(ExecutorBackend):
+    """One batched kernel call per layer partition."""
+
+    name = "pallas"
+
+    def __init__(self, program, check_timing: bool = False,
+                 mode: str = "auto"):
+        super().__init__(program, check_timing=check_timing)
+        self.mode = mode
+
+    def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
+                  w_codes, w_scales) -> jnp.ndarray:
+        if cp.core == isa.CoreSel.LUT:
+            return kops.bitserial_matmul(x_q, w_codes, w_scales,
+                                         lp.bits_w_lut, mode=self.mode)
+        return kops.int4_matmul(x_q, w_codes, w_scales, mode=self.mode)

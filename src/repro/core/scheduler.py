@@ -324,12 +324,20 @@ class ProgramSim:
         return agg
 
 
-def simulate_program(prog) -> ProgramSim:
+def simulate_program(prog, opt_level: int | None = None) -> ProgramSim:
     """Run a compiled ``repro.compiler.Program`` through the event-driven
     engine model, layer by layer (inter-layer synchronous, §3.1): the
     compiler is the single source of truth for the streams; this is the
     same Fig. 5 ground-truth model the closed forms validate against.
+
+    ``opt_level`` (None = time the program as given) first runs the
+    ``repro.compiler.passes`` pipeline at that level, so optimized
+    streams are exactly what gets timed — `-O0` vs `-O1` latency deltas
+    come from this one entry point.
     """
+    if opt_level is not None:
+        from repro.compiler.passes import optimize_program
+        prog = optimize_program(prog, opt_level, validate=False)
     layers = []
     for lp in prog.layers:
         sims = {}

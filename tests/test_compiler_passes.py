@@ -1,0 +1,314 @@
+"""Optimization-pass pipeline + executor backends: invariance suite.
+
+The contract under test (ISSUE 2 acceptance surface):
+  * optimized (-O1) programs still round-trip bit-exactly through asm
+    text and the ``N3HPROG1`` binary image, for every registry smoke
+    arch and the CNN workloads;
+  * the golden executor produces bit-identical outputs on -O1 programs
+    vs -O0 (passes change timing/instruction count, never semantics);
+  * the batched Pallas backend matches the golden backend bit for bit,
+    per layer on registry archs and end-to-end on FC-chained programs;
+  * -O1 strictly reduces simulated total latency on registry networks
+    while reducing the instruction count;
+  * each pass preserves the sync-token protocol (PassPipeline
+    validation) and depthwise layers fail with the dedicated
+    UnsupportedLayerError (skip-and-report in the CLI).
+"""
+import numpy as np
+import pytest
+
+from repro.compiler import (
+    DmaFusionPass,
+    GemmLayer,
+    GoldenExecutor,
+    PallasExecutor,
+    PassError,
+    PassPipeline,
+    SyncElisionPass,
+    UnsupportedLayerError,
+    WeightPrefetchPass,
+    assemble,
+    bind_synthetic,
+    compile_network,
+    disassemble,
+    from_binary,
+    lower_network,
+    optimize_program,
+    to_binary,
+)
+from repro.compiler.cli import execute_report, main as cli_main
+from repro.configs import registry
+from repro.core import isa
+from repro.core.scheduler import (
+    XC7Z020,
+    DspCoreConfig,
+    GemmDims,
+    LutCoreConfig,
+    simulate,
+    simulate_program,
+)
+
+LUT = LutCoreConfig(m=8, n=16, k=128)
+DSP = DspCoreConfig(n_reg_row_a=13)
+ARCHS = registry.list_archs()
+SEQ = 4
+
+
+def _acts(lp):
+    return np.random.default_rng(1000 + lp.index).integers(
+        -8, 8, (lp.dims.m, lp.dims.k)).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# (a) Optimized programs round-trip bit-exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_optimized_registry_program_roundtrips(name):
+    prog = compile_network(name, seq_len=SEQ, opt_level=1)
+    assert prog.opt_stats, "-O1 must record per-pass stats"
+    text = disassemble(prog)
+    assert assemble(text) == prog
+    assert disassemble(assemble(text)) == text       # canonical render
+    blob = to_binary(prog)
+    assert from_binary(blob) == prog
+    assert to_binary(from_binary(blob)) == blob
+
+
+def test_optimized_cnn_program_roundtrips():
+    prog = compile_network("mobilenet_v2", opt_level=1)
+    assert assemble(disassemble(prog)) == prog
+    assert from_binary(to_binary(prog)) == prog
+
+
+# ---------------------------------------------------------------------------
+# (b) Golden outputs are pass-invariant; (c) Pallas matches golden
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_golden_invariance_and_pallas_bit_exact(name):
+    p0 = compile_network(name, seq_len=SEQ)
+    p1 = optimize_program(p0, 1)
+    assert p1.n_instructions < p0.n_instructions
+    g0, g1, pl = GoldenExecutor(p0), GoldenExecutor(p1), PallasExecutor(p1)
+    nl = len(p0.layers)
+    for i in sorted({0, nl // 2, nl - 1}):
+        lp = p0.layers[i]
+        for ex in (g0, g1, pl):
+            bind_synthetic(ex, lp)
+        x = _acts(lp)
+        o0 = np.asarray(g0.run_layer(i, x))
+        o1 = np.asarray(g1.run_layer(i, x))
+        op = np.asarray(pl.run_layer(i, x))
+        assert (o0 == o1).all(), f"{name} layer {i}: -O1 changed golden out"
+        assert (o0 == op).all(), f"{name} layer {i}: pallas != golden"
+
+
+@pytest.mark.parametrize("opt_level", [0, 1])
+def test_pallas_matches_golden_on_fc_chain(opt_level):
+    layers = [GemmLayer("fc1", GemmDims(24, 32, 48)),
+              GemmLayer("fc2", GemmDims(24, 48, 40)),
+              GemmLayer("fc3", GemmDims(24, 40, 16))]
+    prog = lower_network("mlp", layers, LUT, DSP, XC7Z020,
+                         bits_w_lut=5, bits_a=4, n_luts=[20, 16, 8],
+                         opt_level=opt_level)
+    golden, pallas = GoldenExecutor(prog), PallasExecutor(prog)
+    # mode="kernel" executes the actual Pallas kernel bodies (interpret
+    # mode off-TPU) instead of the jnp oracles
+    kern = PallasExecutor(prog, mode="kernel")
+    for lp in prog.layers:
+        for ex in (golden, pallas, kern):
+            bind_synthetic(ex, lp)
+    x = np.random.default_rng(7).integers(-8, 8, (24, 32)).astype(np.int8)
+    out_g = np.asarray(golden.run(x))
+    out_p = np.asarray(pallas.run(x))
+    assert out_g.shape == (24, 16)
+    assert (out_g == out_p).all()
+    assert (out_g == np.asarray(kern.run(x))).all()
+
+
+# ---------------------------------------------------------------------------
+# -O1 reduces simulated latency on registry networks (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["llama3.2-1b", "qwen3-moe-235b-a22b"])
+def test_o1_strictly_reduces_simulated_latency(name):
+    p0 = compile_network(name, seq_len=8)
+    p1 = optimize_program(p0, 1)
+    s0 = simulate_program(p0)
+    s1 = simulate_program(p1)
+    assert s1.total_cycles < s0.total_cycles
+    assert p1.n_instructions < p0.n_instructions
+    # same thing through the simulate_program(opt_level=...) threading
+    assert simulate_program(p0, opt_level=1).total_cycles \
+        == s1.total_cycles
+
+
+def test_per_layer_makespan_never_regresses():
+    p0 = compile_network("gemma-7b", seq_len=8)
+    p1 = optimize_program(p0, 1)
+    s0 = simulate_program(p0)
+    s1 = simulate_program(p1)
+    for l0, l1 in zip(s0.layers, s1.layers):
+        assert l1.cycles <= l0.cycles, l0.name
+
+
+# ---------------------------------------------------------------------------
+# Per-pass unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _fc_program(m=16, k=48, n=96, n_lut=48, opt_level=0):
+    return lower_network(
+        "fc", [GemmLayer("fc", GemmDims(m, k, n))], LUT, DSP, XC7Z020,
+        bits_w_lut=4, bits_a=4, n_luts=[n_lut], opt_level=opt_level)
+
+
+def test_weight_prefetch_deepens_tokens_monotonically():
+    prog = _fc_program()
+    before = {id(cp): dict(cp.initial_tokens)
+              for lp in prog.layers for cp in lp.cores()}
+    detail = WeightPrefetchPass().run(prog)
+    assert detail["tokens_added"] > 0
+    for lp in prog.layers:
+        for cp in lp.cores():
+            for ch, n in before[id(cp)].items():
+                assert cp.initial_tokens.get(ch, 0) >= n
+            # deeper tokens can only speed the core up
+            r = simulate(cp.streams, cp.sim_tokens())
+            assert r.total_cycles > 0
+
+
+def test_sync_elision_strips_single_tile_handshake():
+    # one tile on each core: the slot-token machinery is entirely dead
+    prog = lower_network(
+        "tiny", [GemmLayer("fc", GemmDims(8, 16, 32))], LUT, DSP, XC7Z020,
+        n_luts=[16])
+    base = prog.n_instructions
+    detail = SyncElisionPass().run(prog)
+    assert detail["syncs_elided"] >= 2
+    assert prog.n_instructions == base - detail["syncs_elided"]
+    for lp in prog.layers:
+        for cp in lp.cores():
+            sends = [op for op in cp.ops()
+                     if isinstance(op.instr, isa.SyncInstr)
+                     and not op.instr.is_wait
+                     and op.channel in ("lut.wslot", "dsp.aslot")]
+            assert not sends
+            simulate(cp.streams, cp.sim_tokens())     # still deadlock-free
+
+
+def test_sync_elision_never_starves_consumed_channels():
+    prog = _fc_program(n=160, n_lut=96)               # several weight tiles
+    SyncElisionPass().run(prog)
+    for lp in prog.layers:
+        for cp in lp.cores():
+            simulate(cp.streams, cp.sim_tokens())
+
+
+def test_dma_fusion_emits_bursts_golden_still_exact():
+    p0 = _fc_program(m=8, k=32, n=160, n_lut=96)
+    p1 = optimize_program(p0, 1)
+    bursts = [op.instr for lp in p1.layers for cp in lp.cores()
+              for op in cp.ops()
+              if isinstance(op.instr, (isa.FetchInstr, isa.ResultInstr))
+              and op.instr.onchip_base >= 2]
+    assert bursts, "expected at least one fused DMA burst"
+    for b in bursts:
+        assert b.onchip_base <= DmaFusionPass.max_burst
+    g0, g1 = GoldenExecutor(p0), GoldenExecutor(p1)
+    lp = p0.layers[0]
+    bind_synthetic(g0, lp)
+    bind_synthetic(g1, lp)
+    x = _acts(lp)
+    assert (np.asarray(g0.run_layer(0, x))
+            == np.asarray(g1.run_layer(0, x))).all()
+
+
+def test_pipeline_validation_catches_broken_pass():
+    class BreakTokens:
+        name = "break-tokens"
+
+        def run(self, prog):
+            for lp in prog.layers:
+                for cp in lp.cores():
+                    # drop every send: waits can never be satisfied
+                    for e in cp.streams:
+                        cp.streams[e] = [
+                            op for op in cp.streams[e]
+                            if not (isinstance(op.instr, isa.SyncInstr)
+                                    and not op.instr.is_wait)]
+            return {}
+
+    prog = _fc_program()
+    with pytest.raises(PassError, match="break-tokens"):
+        PassPipeline([BreakTokens()]).run(prog)
+
+
+def test_opt_level_threaded_through_lower_and_cli_entry():
+    p1 = compile_network("llama3.2-1b", seq_len=SEQ, opt_level=1)
+    assert [ps.name for ps in p1.opt_stats] == \
+        ["weight-prefetch", "sync-elision", "dma-fusion"]
+    with pytest.raises(ValueError):
+        optimize_program(compile_network("llama3.2-1b", seq_len=SEQ), 7)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise: dedicated error + CLI skip-and-report
+# ---------------------------------------------------------------------------
+
+
+def _dw_program():
+    return lower_network(
+        "dwnet",
+        [GemmLayer("fc0", GemmDims(64, 9, 32)),
+         GemmLayer("dw", GemmDims(64, 9, 32), depthwise=True)],
+        LUT, DSP, XC7Z020, n_luts=[16, 16])
+
+
+def test_depthwise_raises_dedicated_error_on_both_backends():
+    prog = _dw_program()
+    x = np.zeros((64, 9), np.int8)
+    for backend in (GoldenExecutor, PallasExecutor):
+        with pytest.raises(UnsupportedLayerError):
+            backend(prog).run_layer(1, x)
+    # back-compat: callers catching NotImplementedError still work
+    with pytest.raises(NotImplementedError):
+        GoldenExecutor(prog).run_layer(1, x)
+
+
+@pytest.mark.parametrize("backend", ["golden", "pallas"])
+def test_execute_report_skips_depthwise(backend):
+    report = execute_report(_dw_program(), backend=backend)
+    assert "executed  1/2 layers" in report
+    assert "skipped   1 unsupported depthwise" in report
+    assert "dw" in report
+
+
+# ---------------------------------------------------------------------------
+# CLI flags
+# ---------------------------------------------------------------------------
+
+
+def test_cli_opt_and_backend_flags(capsys):
+    assert cli_main(["llama3.2-1b", "--seq-len", "4", "-O", "1",
+                     "--simulate"]) == 0
+    out = capsys.readouterr().out
+    assert "passes    3 passes" in out
+    assert "weight-prefetch" in out and "sync-elision" in out \
+        and "dma-fusion" in out
+    assert "simulated" in out
+
+    assert cli_main(["llama3.2-1b", "--seq-len", "4", "-O", "1",
+                     "--execute", "--backend", "pallas"]) == 0
+    out = capsys.readouterr().out
+    assert "executed" in out and "pallas backend" in out
+
+
+def test_cli_o0_has_no_pass_block(capsys):
+    assert cli_main(["llama3.2-1b", "--seq-len", "4"]) == 0
+    out = capsys.readouterr().out
+    assert "passes" not in out
