@@ -8,7 +8,11 @@ backends:
     ``simulate_program`` (optimized streams are what gets timed);
   * one registry LM smoke program executed functionally on both
     backends: golden interpreter vs batched Pallas fast path, wall
-    clock + speedup + a bit-exactness flag.
+    clock + speedup + a bit-exactness flag;
+  * multi-device scaling: the same LM compiled under 1 -> 2 -> 4-device
+    pipeline and filter plans, with the cross-device makespan (link
+    latency included) and speedup vs one device for a batched input
+    stream.
 
 Covers both CNN workloads and a slice of the LM registry, so compile
 cost is tracked for every frontend family. Each row's ``derived`` field
@@ -144,10 +148,48 @@ def bench_backends(seq_len: int = 64) -> tuple[str, float, str]:
             json.dumps(bench, sort_keys=True))
 
 
+def bench_multi_device(seq_len: int = 64,
+                       batches: int = 8) -> tuple[str, float, str]:
+    """1 -> 2 -> 4-device scaling of one registry LM program: simulated
+    cross-device makespan (plan link latency included) for a stream of
+    ``batches`` inputs, vs the single-device baseline."""
+    t0 = time.time()
+    prog = compile_network(EXEC_NETWORK, seq_len=seq_len, opt_level=1)
+    base = simulate_program(prog).total_cycles * batches
+    bench = {
+        "BENCH": "compiler.multi_device",
+        "network": EXEC_NETWORK,
+        "seq_len": seq_len,
+        "batches": batches,
+        "makespan_1dev": base,
+        "plans": {},
+    }
+    for kind in ("pipeline", "filter"):
+        for n_dev in (2, 4):
+            bundle = compile_network(EXEC_NETWORK, seq_len=seq_len,
+                                     opt_level=1, devices=n_dev,
+                                     partition=kind)
+            bs = simulate_program(bundle, batches=batches)
+            bench["plans"][f"{kind}_x{n_dev}"] = {
+                "makespan": bs.total_cycles,
+                "latency": bs.latency_cycles,
+                "interval": bs.interval_cycles,
+                "speedup_x": round(base / max(bs.total_cycles, 1), 3),
+                "instructions": bundle.n_instructions,
+                "link_bytes": sum(e.nbytes for e in bundle.edges),
+            }
+    bench["pipeline_x2_beats_1dev"] = \
+        bench["plans"]["pipeline_x2"]["makespan"] < base
+    wall = time.time() - t0
+    return (f"compiler.multi_device.{EXEC_NETWORK}", 1e6 * wall,
+            json.dumps(bench, sort_keys=True))
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = [bench_network(name, kw)
             for name, kw in (SMOKE_NETWORKS if smoke else NETWORKS)]
     rows.append(bench_backends(seq_len=16 if smoke else 64))
+    rows.append(bench_multi_device(seq_len=16 if smoke else 64))
     return rows
 
 

@@ -14,14 +14,40 @@ Pipeline::
                     └─ runtime.ExecutorBackend  → functional outputs:
                          runtime.GoldenExecutor   (bit-exact interpreter)
                          runtime.PallasExecutor   (batched fast path)
+
+Multi-device plans (``--devices N``): partition.derive_plan splits the
+network (pipeline stages or filter-parallel shards, derived from the
+``parallel/`` axis rules) and partition.lower_partitioned emits a
+MultiDeviceProgram — per-device Programs wired by cross-device
+``*.xdev`` Sync channels — consumed by asm.to_bundle_binary
+(``N3HBUND1``), simulate_program (cross-device makespan under the
+plan's LinkModel) and runtime.MultiDeviceExecutor (bit-exact vs the
+single-device program).
 """
 from repro.compiler.asm import (
     assemble,
     disassemble,
+    disassemble_bundle,
     from_binary,
+    from_bundle_binary,
     to_binary,
+    to_bundle_binary,
 )
 from repro.compiler.cli import compile_network
+from repro.compiler.partition import (
+    BundleSim,
+    ChannelEdge,
+    LinkModel,
+    MultiDeviceProgram,
+    PartitionError,
+    PartitionPlan,
+    derive_plan,
+    kind_from_rules,
+    lower_partitioned,
+    optimize_bundle,
+    simulate_bundle,
+    validate_bundle,
+)
 from repro.compiler.passes import (
     O1_PASSES,
     Pass,
@@ -40,10 +66,12 @@ from repro.compiler.runtime import (
     ExecutorBackend,
     GoldenExecutor,
     LayerWeights,
+    MultiDeviceExecutor,
     PallasExecutor,
     UnsupportedLayerError,
     bind_synthetic,
     get_backend,
+    synthetic_weights,
 )
 from repro.compiler.lower import (
     LayerAddrs,
@@ -69,14 +97,20 @@ from repro.compiler.program import (
 )
 
 __all__ = [
-    "assemble", "disassemble", "from_binary", "to_binary",
+    "assemble", "disassemble", "disassemble_bundle", "from_binary",
+    "from_bundle_binary", "to_binary", "to_bundle_binary",
     "compile_network",
+    "BundleSim", "ChannelEdge", "LinkModel", "MultiDeviceProgram",
+    "PartitionError", "PartitionPlan", "derive_plan", "kind_from_rules",
+    "lower_partitioned", "optimize_bundle", "simulate_bundle",
+    "validate_bundle",
     "O1_PASSES", "Pass", "PassError", "PassPipeline", "PassStats",
     "DmaFusionPass", "SyncElisionPass", "WeightPrefetchPass",
     "optimize_program", "pipeline_for",
     "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
-    "LayerWeights", "PallasExecutor", "UnsupportedLayerError",
-    "bind_synthetic", "get_backend",
+    "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
+    "UnsupportedLayerError", "bind_synthetic", "get_backend",
+    "synthetic_weights",
     "LayerAddrs", "lower_dsp_layer", "lower_lut_layer", "lower_network",
     "solve_split_dims", "list_networks", "lm_gemm_layers", "network_layers",
     "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap", "Program",

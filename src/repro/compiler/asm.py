@@ -39,6 +39,12 @@ The binary image is ``N3HPROG1`` + a canonical-JSON metadata section
 by the packed streams: per (layer, core, engine) a u32 instruction
 count then ``count`` records of 16-byte little-endian ISA word + u32
 cycles.
+
+Multi-device bundles (``compiler/partition.py``) pack as ``N3HBUND1``:
+a canonical-JSON header (name, partition plan, cross-device channel
+edge table) followed by one length-prefixed ``N3HPROG1`` section per
+device, so a bundle round-trips bit-exactly iff every per-device
+program does.
 """
 from __future__ import annotations
 
@@ -67,6 +73,7 @@ from repro.compiler.program import (
 )
 
 MAGIC = b"N3HPROG1"
+MAGIC_BUNDLE = b"N3HBUND1"
 
 _ENGINE_BY_NAME = {"fetch": isa.Engine.FETCH, "execute": isa.Engine.EXECUTE,
                    "result": isa.Engine.RESULT}
@@ -380,3 +387,107 @@ def _parse_binary(data: bytes) -> Program:
         raise ValueError(f"trailing bytes in image ({len(data) - pos})")
     return Program(name=meta["program"], device=device, lut_cfg=lut_cfg,
                    dsp_cfg=dsp_cfg, layers=layers, memory=memory)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device bundle image (N3HBUND1)
+# ---------------------------------------------------------------------------
+
+
+def _plan_meta(plan) -> dict:
+    return {
+        "kind": plan.kind,
+        "n_devices": plan.n_devices,
+        "stages": [list(s) for s in plan.stages]
+        if plan.stages is not None else None,
+        "shards": [list(s) for s in plan.shards]
+        if plan.shards is not None else None,
+        "link": {"latency_cycles": plan.link.latency_cycles,
+                 "bytes_per_cycle": plan.link.bytes_per_cycle},
+    }
+
+
+def _plan_from_meta(meta: dict):
+    from repro.compiler.partition import LinkModel, PartitionPlan
+    return PartitionPlan(
+        kind=meta["kind"], n_devices=meta["n_devices"],
+        stages=tuple(tuple(s) for s in meta["stages"])
+        if meta["stages"] is not None else None,
+        shards=tuple(tuple(s) for s in meta["shards"])
+        if meta["shards"] is not None else None,
+        link=LinkModel(latency_cycles=meta["link"]["latency_cycles"],
+                       bytes_per_cycle=meta["link"]["bytes_per_cycle"]))
+
+
+def to_bundle_binary(mdp) -> bytes:
+    """Pack a ``MultiDeviceProgram`` into the ``N3HBUND1`` image."""
+    meta = {
+        "bundle": mdp.name,
+        "plan": _plan_meta(mdp.plan),
+        "edges": [[e.src_device, e.src_layer, e.dst_device, e.dst_layer,
+                   e.src_channel, e.dst_channel, e.nbytes]
+                  for e in mdp.edges],
+    }
+    blob = json.dumps(meta, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+    parts = [MAGIC_BUNDLE, struct.pack("<I", len(blob)), blob,
+             struct.pack("<I", len(mdp.devices))]
+    for prog in mdp.devices:
+        image = to_binary(prog)
+        parts.append(struct.pack("<I", len(image)))
+        parts.append(image)
+    return b"".join(parts)
+
+
+def from_bundle_binary(data: bytes):
+    """Unpack an ``N3HBUND1`` image back into a ``MultiDeviceProgram``."""
+    from repro.compiler.partition import ChannelEdge, MultiDeviceProgram
+    try:
+        if data[:8] != MAGIC_BUNDLE:
+            raise ValueError("not an N3HBUND1 image")
+        (meta_len,) = struct.unpack_from("<I", data, 8)
+        pos = 12
+        meta = json.loads(data[pos:pos + meta_len].decode("utf-8"))
+        pos += meta_len
+        (n_devices,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        devices = []
+        for _ in range(n_devices):
+            (plen,) = struct.unpack_from("<I", data, pos)
+            pos += 4
+            devices.append(from_binary(data[pos:pos + plen]))
+            pos += plen
+        if pos != len(data):
+            raise ValueError(
+                f"trailing bytes in bundle ({len(data) - pos})")
+        edges = [ChannelEdge(src_device=e[0], src_layer=e[1],
+                             dst_device=e[2], dst_layer=e[3],
+                             src_channel=e[4], dst_channel=e[5],
+                             nbytes=e[6]) for e in meta["edges"]]
+        return MultiDeviceProgram(name=meta["bundle"],
+                                  plan=_plan_from_meta(meta["plan"]),
+                                  devices=devices, edges=edges)
+    except (struct.error, UnicodeDecodeError, KeyError, IndexError,
+            TypeError) as e:
+        raise ValueError(f"corrupt N3HBUND1 image: {e!r}") from e
+
+
+def disassemble_bundle(mdp) -> str:
+    """Readable text of a bundle: plan header + per-device assembly.
+
+    Informational (the per-device sections are each valid ``assemble``
+    input, but the concatenation is not re-assemblable as a bundle —
+    use the ``N3HBUND1`` binary for bit-exact round-trips).
+    """
+    out = [f"; n3h-core multi-device bundle {mdp.name}",
+           f"; plan {mdp.plan.describe()}",
+           f"; link latency={mdp.plan.link.latency_cycles} cycles, "
+           f"{mdp.plan.link.bytes_per_cycle} B/cycle"]
+    for e in mdp.edges:
+        out.append(f"; edge dev{e.src_device}.L{e.src_layer} "
+                   f"({e.src_channel}) -> dev{e.dst_device}."
+                   f"L{e.dst_layer} ({e.dst_channel}) {e.nbytes}B")
+    for d, prog in enumerate(mdp.devices):
+        out.append(f"; ===== device {d}/{len(mdp.devices)} =====")
+        out.append(disassemble(prog).rstrip("\n"))
+    return "\n".join(out) + "\n"

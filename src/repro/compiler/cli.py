@@ -8,6 +8,8 @@ Examples::
     python -m repro.compiler resnet18 --simulate        # + Fig.5 decomposition
     python -m repro.compiler resnet18 -O 1 --simulate   # optimized streams
     python -m repro.compiler llama3.2-1b -O 1 --execute --backend pallas
+    python -m repro.compiler llama3.2-1b --devices 2 --partition pipeline \
+        --simulate                                      # multi-device bundle
     python -m repro.compiler --list
 """
 from __future__ import annotations
@@ -28,8 +30,20 @@ from repro.quant.uniform import qrange
 from repro.compiler import asm
 from repro.compiler.lower import lower_network
 from repro.compiler.networks import list_networks, network_layers
+from repro.compiler.partition import (
+    PLAN_KINDS,
+    LinkModel,
+    PartitionError,
+    derive_plan,
+    lower_partitioned,
+)
 from repro.compiler.passes import OPT_LEVELS
-from repro.compiler.runtime import BACKENDS, bind_synthetic, get_backend
+from repro.compiler.runtime import (
+    BACKENDS,
+    MultiDeviceExecutor,
+    bind_synthetic,
+    get_backend,
+)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -52,6 +66,21 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--lut-m", type=int, default=8)
     p.add_argument("--lut-n", type=int, default=16)
     p.add_argument("--lut-k", type=int, default=128)
+    p.add_argument("--devices", type=int, default=1,
+                   help="compile for N coordinated devices (a "
+                        "multi-device bundle when N > 1 or --partition "
+                        "is given)")
+    p.add_argument("--partition", choices=PLAN_KINDS, default=None,
+                   help="partition plan kind: pipeline stages or "
+                        "filter-parallel shards; default derives from "
+                        "the parallel/ axis rules")
+    p.add_argument("--link-latency", type=int, default=None,
+                   help="cross-device link latency in cycles "
+                        "(default: LinkModel default)")
+    p.add_argument("--batches", type=int, default=8,
+                   help="back-to-back inputs the multi-device makespan "
+                        "covers under --simulate (pipeline plans "
+                        "overlap them)")
     p.add_argument("-O", "--opt", type=int, default=0, choices=OPT_LEVELS,
                    help="optimization level: 0 = canonical Fig.-3 schedule, "
                         "1 = passes.py pipeline (prefetch reorder, sync "
@@ -77,8 +106,16 @@ def build_parser() -> argparse.ArgumentParser:
 def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
                     bits_a: int = 4, ratio: float | None = None,
                     seq_len: int = 64, lut_m: int = 8, lut_n: int = 16,
-                    lut_k: int = 128, opt_level: int = 0):
-    """Programmatic entry point used by the CLI, benchmarks and tests."""
+                    lut_k: int = 128, opt_level: int = 0,
+                    devices: int = 1, partition: str | None = None,
+                    link_latency: int | None = None):
+    """Programmatic entry point used by the CLI, benchmarks and tests.
+
+    ``devices > 1`` (or an explicit ``partition`` kind) compiles a
+    multi-device ``MultiDeviceProgram`` bundle under a plan derived by
+    ``partition.derive_plan``; otherwise the legacy single
+    ``Program``.
+    """
     dev = DEVICES[device]
     lut_cfg = LutCoreConfig(m=lut_m, n=lut_n, k=lut_k)
     dsp_cfg = DspCoreConfig(n_reg_row_a=DspCoreConfig.rows_for_device(dev))
@@ -86,9 +123,53 @@ def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
     n_luts = None
     if ratio is not None:
         n_luts = [int(round(ratio * gl.dims.n)) for gl in layers]
-    return lower_network(name, layers, lut_cfg, dsp_cfg, dev,
-                         bits_w_lut=bits_w, bits_a=bits_a, n_luts=n_luts,
-                         opt_level=opt_level)
+    if devices == 1 and partition is None:
+        return lower_network(name, layers, lut_cfg, dsp_cfg, dev,
+                             bits_w_lut=bits_w, bits_a=bits_a,
+                             n_luts=n_luts, opt_level=opt_level)
+    link = LinkModel() if link_latency is None \
+        else LinkModel(latency_cycles=link_latency)
+    plan = derive_plan(layers, devices, kind=partition, link=link)
+    return lower_partitioned(name, layers, plan, lut_cfg, dsp_cfg, dev,
+                             bits_w_lut=bits_w, bits_a=bits_a,
+                             n_luts=n_luts, opt_level=opt_level)
+
+
+def summarize_bundle(mdp, simulate: bool = False, batches: int = 8) -> str:
+    """Multi-device summary: plan, per-device programs, hand-offs."""
+    lines = [
+        f"bundle    {mdp.name}  ({mdp.plan.describe()})",
+        f"devices   {mdp.n_devices}  layers {mdp.n_layers} (global)",
+        f"edges     {len(mdp.edges)} cross-device channel(s), "
+        f"{sum(e.nbytes for e in mdp.edges)} B/traversal over the link",
+        f"link      {mdp.plan.link.latency_cycles} cycle latency, "
+        f"{mdp.plan.link.bytes_per_cycle} B/cycle",
+    ]
+    for d, prog in enumerate(mdp.devices):
+        s = prog.stats()
+        lines.append(f"  dev{d}  {len(prog.layers)} layers, "
+                     f"{s.n_instructions} instrs, "
+                     f"{s.ddr_footprint} B ddr, "
+                     f"{s.bytes_fetched / 1e6:.3f} MB fetched")
+    if mdp.devices and mdp.devices[0].opt_stats:
+        lines.append("passes    (per device)")
+        for ps in mdp.devices[0].opt_stats:
+            lines.append(f"  dev0 {ps.render()}")
+    if simulate:
+        t0 = time.time()
+        bs = simulate_program(mdp, batches=batches)
+        dt = time.time() - t0
+        dev0 = mdp.devices[0].device
+        lines.append(
+            f"simulated {bs.total_cycles} cycles makespan for "
+            f"{bs.batches} input(s) "
+            f"({dev0.cycles_to_ms(bs.total_cycles):.3f} ms @ "
+            f"{dev0.freq_mhz:.0f} MHz; sim wall {dt:.2f}s)")
+        lines.append(f"  latency/traversal {bs.latency_cycles} cycles, "
+                     f"steady-state interval {bs.interval_cycles}")
+        for d, s in enumerate(bs.device_sims):
+            lines.append(f"  dev{d}: {s.total_cycles} cycles")
+    return "\n".join(lines)
 
 
 def summarize(prog, simulate: bool = False) -> str:
@@ -134,18 +215,32 @@ def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
 
     Depthwise layers have no functional executor semantics; they are
     skipped and reported instead of crashing the whole CNN program.
+
+    Accepts a single ``Program`` or a multi-device bundle; the bundle
+    path drives the same per-layer synthetic weights and activations
+    through ``MultiDeviceExecutor``, so its checksum is bit-identical
+    to the single-device run of the same network.
     """
-    ex = get_backend(backend)(prog)
+    is_bundle = hasattr(prog, "devices")
+    if is_bundle:
+        ex = MultiDeviceExecutor(prog, backend=backend)
+        layers = ex.layers
+    else:
+        ex = get_backend(backend)(prog)
+        layers = prog.layers
     rng = np.random.default_rng(seed)
     skipped: list[str] = []
     checksum = 0.0
     executed = 0
     t0 = time.time()
-    for lp in prog.layers:
+    for lp in layers:
         if lp.depthwise:
             skipped.append(lp.name)
             continue
-        bind_synthetic(ex, lp, seed=seed + lp.index)
+        if is_bundle:
+            ex.bind_synthetic(lp.index, seed=seed + lp.index)
+        else:
+            bind_synthetic(ex, lp, seed=seed + lp.index)
         lo_a, hi_a = qrange(lp.bits_a)
         x_q = rng.integers(lo_a, hi_a + 1,
                            (lp.dims.m, lp.dims.k)).astype(np.int8)
@@ -153,8 +248,10 @@ def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
         checksum += float(np.abs(out).sum())
         executed += 1
     dt = time.time() - t0
-    lines = [f"executed  {executed}/{len(prog.layers)} layers via "
-             f"{backend} backend in {dt:.3f}s (|out| sum {checksum:.6e})"]
+    what = f"{backend} backend" if not is_bundle else \
+        f"{backend} backend x{prog.n_devices} devices"
+    lines = [f"executed  {executed}/{len(layers)} layers via "
+             f"{what} in {dt:.3f}s (|out| sum {checksum:.6e})"]
     if skipped:
         names = ", ".join(skipped[:6]) + (" ..." if len(skipped) > 6 else "")
         lines.append(f"skipped   {len(skipped)} unsupported depthwise "
@@ -175,31 +272,43 @@ def main(argv: list[str] | None = None) -> int:
               file=sys.stderr)
         return 2
 
+    if args.devices < 1:
+        print(f"error: --devices must be >= 1, got {args.devices}",
+              file=sys.stderr)
+        return 2
+
     try:
         prog = compile_network(
             args.network, device=args.device, bits_w=args.bits_w,
             bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
             lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k,
-            opt_level=args.opt)
-    except (KeyError, ValueError) as e:
+            opt_level=args.opt, devices=args.devices,
+            partition=args.partition, link_latency=args.link_latency)
+    except (KeyError, ValueError, PartitionError) as e:
         msg = e.args[0] if e.args else e
         print(f"error: {msg}", file=sys.stderr)
         return 2
 
+    is_bundle = hasattr(prog, "devices")
     if args.format == "summary":
-        print(summarize(prog, simulate=args.simulate))
+        if is_bundle:
+            print(summarize_bundle(prog, simulate=args.simulate,
+                                   batches=args.batches))
+        else:
+            print(summarize(prog, simulate=args.simulate))
         if args.execute:
             print(execute_report(prog, backend=args.backend))
         return 0
     if args.format == "asm":
-        text = asm.disassemble(prog)
+        text = asm.disassemble_bundle(prog) if is_bundle \
+            else asm.disassemble(prog)
         if args.output:
             with open(args.output, "w") as f:
                 f.write(text)
         else:
             sys.stdout.write(text)
         return 0
-    blob = asm.to_binary(prog)
+    blob = asm.to_bundle_binary(prog) if is_bundle else asm.to_binary(prog)
     if args.output:
         with open(args.output, "wb") as f:
             f.write(blob)

@@ -4,8 +4,16 @@ The golden interpreter now lives in ``runtime/golden.py`` behind the
 :class:`~repro.compiler.runtime.base.ExecutorBackend` interface, next
 to the batched Pallas fast path (``runtime/pallas.py``). Import from
 ``repro.compiler.runtime`` (or ``repro.compiler``) in new code; this
-module keeps the historical import path working.
+module keeps the historical import path working but warns on import
+and will be removed once external callers have migrated.
 """
+import warnings
+
+warnings.warn(
+    "repro.compiler.executor is deprecated; import from "
+    "repro.compiler.runtime (or repro.compiler) instead",
+    DeprecationWarning, stacklevel=2)
+
 from repro.compiler.runtime import (
     BACKENDS,
     ExecutionError,

@@ -321,8 +321,15 @@ def lower_network(name: str, layers: list[GemmLayer],
                   bits_w_lut: int | list[int] = 4,
                   bits_a: int | list[int] = 4,
                   n_luts: list[int] | None = None,
-                  opt_level: int = 0) -> Program:
+                  opt_level: int = 0,
+                  plan=None) -> Program:
     """Compile a whole network into a :class:`Program`.
+
+    ``plan`` (a ``partition.PartitionPlan``) switches to the
+    multi-device path: the network is partitioned per the plan and a
+    ``MultiDeviceProgram`` bundle of per-device programs with
+    cross-device Sync channels is returned instead (a 1-device plan
+    reproduces the single program bit for bit).
 
     Per layer: pick the neuron split (given ``n_luts`` or solved via
     Eq. 12), partition the GEMM along output filters, lower each
@@ -336,6 +343,12 @@ def lower_network(name: str, layers: list[GemmLayer],
     additionally runs the ``passes.py`` optimization pipeline (the
     per-pass accounting lands on ``Program.opt_stats``).
     """
+    if plan is not None:
+        # deferred import: partition.py builds on this lowerer
+        from repro.compiler.partition import lower_partitioned
+        return lower_partitioned(name, layers, plan, lut_cfg, dsp_cfg,
+                                 dev, bits_w_lut=bits_w_lut, bits_a=bits_a,
+                                 n_luts=n_luts, opt_level=opt_level)
     nl = len(layers)
     bw = list(bits_w_lut) if isinstance(bits_w_lut, (list, tuple)) \
         else [bits_w_lut] * nl

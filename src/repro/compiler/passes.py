@@ -62,11 +62,23 @@ from typing import Protocol, runtime_checkable
 
 from repro.core import isa
 from repro.core.scheduler import Op, _dma_cycles, simulate
-from repro.compiler.program import CoreProgram, LayerProgram, Program
+from repro.compiler.program import (
+    CROSS_DEVICE_CHANNELS,
+    CoreProgram,
+    LayerProgram,
+    Program,
+)
 
 #: Channels that carry the inter-layer synchronous chain (Eq. 10).
 #: No pass may add, remove or reorder syncs on these.
 BARRIER_CHANNELS = frozenset({"lut.bar", "dsp.bar"})
+
+#: Channels no pass may touch: barriers plus the cross-device hand-off
+#: channels (``*.xdev``), whose matching sync lives in *another*
+#: device's program — eliding or reordering one corrupts a hand-off
+#: the per-device deadlock check cannot see
+#: (``partition.validate_bundle`` re-checks the pairing post-pass).
+PROTECTED_CHANNELS = BARRIER_CHANNELS | CROSS_DEVICE_CHANNELS
 
 #: Result-drain channels (execute -> result handshake).
 RESULT_CHANNELS = frozenset({"lut.res", "dsp.res"})
@@ -226,7 +238,7 @@ class SyncElisionPass:
         drop: dict[str, set[int]] = {}
         removed = 0
         for ch, slist in sends.items():
-            if ch in BARRIER_CHANNELS:
+            if ch in PROTECTED_CHANNELS:
                 continue
             if len({e for e, _ in slist}) != 1:
                 # multiple sender engines: cross-engine post order is
@@ -384,7 +396,7 @@ class DmaFusionPass:
             if (i < len(stream)
                     and isinstance(stream[i].instr, isa.SyncInstr)
                     and stream[i].instr.is_wait
-                    and stream[i].channel not in BARRIER_CHANNELS):
+                    and stream[i].channel not in PROTECTED_CHANNELS):
                 waits = (stream[i],)
                 i += 1
             if (i + 1 < len(stream)

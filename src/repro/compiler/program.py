@@ -5,8 +5,8 @@ currency everything downstream consumes:
 
   * ``core/scheduler.py`` simulates its per-engine instruction streams
     (the Fig. 3/Fig. 5 latency decomposition);
-  * ``compiler/executor.py`` interprets it functionally against the
-    reference GEMM numerics (golden model);
+  * ``compiler/runtime/`` executes it functionally against the
+    reference GEMM numerics (golden model) or the batched Pallas path;
   * ``compiler/asm.py`` serializes it to text assembly and to a packed
     binary image, bit-exactly.
 
@@ -25,6 +25,7 @@ below, so disassembly loses nothing.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 from repro.core import isa
 from repro.core.scheduler import (
@@ -40,15 +41,25 @@ from repro.core.scheduler import (
 # ---------------------------------------------------------------------------
 
 # LUT-core channels: weight column tile ready (SE), activation matrix
-# ready, free weight-buffer slot (WE), result tile ready, layer barrier.
+# ready, free weight-buffer slot (WE), result tile ready, layer barrier,
+# cross-device hand-off (multi-device plans, compiler/partition.py).
 LUT_CHANNEL_FLAGS = {"lut.wtile": 1, "lut.act": 2, "lut.wslot": 3,
-                     "lut.res": 4, "lut.bar": 5}
+                     "lut.res": 4, "lut.bar": 5, "lut.xdev": 6}
 # DSP-core channels: whole-weight-resident ready, activation row tile,
-# weight column tile, free activation slot, result tile, layer barrier.
+# weight column tile, free activation slot, result tile, layer barrier,
+# cross-device hand-off.
 DSP_CHANNEL_FLAGS = {"dsp.wall": 1, "dsp.atile": 2, "dsp.wtile": 3,
-                     "dsp.aslot": 4, "dsp.res": 5, "dsp.bar": 6}
+                     "dsp.aslot": 4, "dsp.res": 5, "dsp.bar": 6,
+                     "dsp.xdev": 7}
 
 CHANNEL_FLAGS = {**LUT_CHANNEL_FLAGS, **DSP_CHANNEL_FLAGS}
+
+#: Channels whose tokens cross a device boundary (the matching send or
+#: wait lives in *another* device's program). Local simulation arms
+#: their waits at t=0; the optimization passes must never elide or
+#: reorder them (compiler/passes.py), and ``partition.validate_bundle``
+#: checks the cross-device pairing instead.
+CROSS_DEVICE_CHANNELS = frozenset({"lut.xdev", "dsp.xdev"})
 FLAG_CHANNELS = {
     isa.CoreSel.LUT: {f: ch for ch, f in LUT_CHANNEL_FLAGS.items()},
     isa.CoreSel.DSP: {f: ch for ch, f in DSP_CHANNEL_FLAGS.items()},
@@ -159,19 +170,23 @@ class CoreProgram:
         send at the tail of the previous layer's result stream posts
         them. Layer-at-a-time simulation/execution models the Eq.-10
         synchronous chain, where the previous layer has fully drained,
-        so any barrier-channel deficit is pre-armed at t=0 here.
+        so any barrier-channel deficit is pre-armed at t=0 here. The
+        same applies to cross-device channels (``*.xdev``): their
+        matching sends live in another device's program.
         """
         tokens = dict(self.initial_tokens)
-        ch = f"{CORE_NAMES[self.core]}.bar"
-        # Arm every in-layer barrier *wait*; the layer's own barrier
-        # *send* targets the next layer and must not offset the count.
-        waits = sum(1 for op in self.ops()
-                    if op.channel == ch
-                    and isinstance(op.instr, isa.SyncInstr)
-                    and op.instr.is_wait)
-        deficit = waits - tokens.get(ch, 0)
-        if deficit > 0:
-            tokens[ch] = tokens.get(ch, 0) + deficit
+        cn = CORE_NAMES[self.core]
+        for ch in (f"{cn}.bar", f"{cn}.xdev"):
+            # Arm every in-layer barrier/cross-device *wait*; the
+            # layer's own sends target another layer (or device) and
+            # must not offset the count.
+            waits = sum(1 for op in self.ops()
+                        if op.channel == ch
+                        and isinstance(op.instr, isa.SyncInstr)
+                        and op.instr.is_wait)
+            deficit = waits - tokens.get(ch, 0)
+            if deficit > 0:
+                tokens[ch] = tokens.get(ch, 0) + deficit
         return tokens
 
 
@@ -259,6 +274,20 @@ class Program:
                 for lp in self.layers
                 for cp in lp.cores()
                 for op in cp.ops()]
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the instruction image + identity.
+
+        Keyed on the encoded words (which capture every operand,
+        bit-width and sync flag) plus name/device/seq extents, so two
+        programs share a fingerprint iff they execute identically —
+        the ``PallasExecutor`` per-program JIT cache keys on this.
+        """
+        h = hashlib.sha256(self.name.encode())
+        h.update(self.device.name.encode())
+        for w in self.words():
+            h.update(w.to_bytes(16, "little"))
+        return h.hexdigest()
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, Program):

@@ -5,7 +5,11 @@
   golden.py  — :class:`GoldenExecutor`: contract-checking reference
                interpreter (bit-exact vs ``core/hetero_linear.py``).
   pallas.py  — :class:`PallasExecutor`: batched fast path, one
-               ``kernels`` GEMM call per layer partition.
+               ``kernels`` GEMM call per layer partition (per-program
+               JIT cache keyed on the program fingerprint).
+  multi.py   — :class:`MultiDeviceExecutor`: steps a
+               ``partition.MultiDeviceProgram`` bundle, one backend
+               executor per device, with the cross-device hand-off.
 
 Select by name via :func:`get_backend` (the CLI's ``--backend`` flag
 resolves here). To add a backend: subclass ``ExecutorBackend``,
@@ -17,8 +21,10 @@ from repro.compiler.runtime.base import (
     LayerWeights,
     UnsupportedLayerError,
     bind_synthetic,
+    synthetic_weights,
 )
 from repro.compiler.runtime.golden import GoldenExecutor
+from repro.compiler.runtime.multi import MultiDeviceExecutor
 from repro.compiler.runtime.pallas import PallasExecutor
 
 BACKENDS: dict[str, type[ExecutorBackend]] = {
@@ -39,6 +45,7 @@ def get_backend(name: str) -> type[ExecutorBackend]:
 
 __all__ = [
     "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
-    "LayerWeights", "PallasExecutor", "UnsupportedLayerError",
-    "bind_synthetic", "get_backend",
+    "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
+    "UnsupportedLayerError", "bind_synthetic", "get_backend",
+    "synthetic_weights",
 ]

@@ -159,20 +159,7 @@ class ExecutorBackend:
         """Chain all layers (FC-style networks whose GEMMs compose:
         n_i == k_{i+1}). Activations are requantized to each layer's
         ``bits_a`` between layers, as the hardware writes them back."""
-        out = None
-        for lp in self.program.layers:
-            if out is not None:
-                if out.shape[1] != lp.dims.k or out.shape[0] != lp.dims.m:
-                    raise ExecutionError(
-                        f"layer {lp.index} expects [{lp.dims.m},{lp.dims.k}] "
-                        f"activations but layer {lp.index - 1} produced "
-                        f"{tuple(out.shape)}; run_layer() drives "
-                        f"non-chaining (conv) programs layer by layer")
-                s_a = fit_scale(out, lp.bits_a)
-                lo, hi = qrange(lp.bits_a)
-                x_q = jnp.clip(jnp.round(out / s_a), lo, hi).astype(jnp.int8)
-            out = self.run_layer(lp.index, x_q)
-        return out
+        return chain_layers(self.program.layers, self.run_layer, x_q)
 
     # -- backend hook ------------------------------------------------------
 
@@ -182,24 +169,63 @@ class ExecutorBackend:
         raise NotImplementedError
 
 
+def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
+    """FC-chain ``layers`` through ``run_layer(index, x_q)`` with the
+    inter-layer requantization the hardware applies on write-back.
+
+    The single source of truth for the bit-exactness-critical requant
+    chain: ``ExecutorBackend.run`` drives it over one program's layers,
+    ``MultiDeviceExecutor.run`` over a bundle's global layers — so the
+    multi-device hand-off requantizes exactly like the single-device
+    chain. ``layers`` items need ``.index``, ``.dims`` and ``.bits_a``.
+    """
+    out = None
+    for lp in layers:
+        if out is not None:
+            if out.shape[1] != lp.dims.k or out.shape[0] != lp.dims.m:
+                raise ExecutionError(
+                    f"layer {lp.index} expects [{lp.dims.m},{lp.dims.k}] "
+                    f"activations but layer {lp.index - 1} produced "
+                    f"{tuple(out.shape)}; run_layer() drives "
+                    f"non-chaining (conv) programs layer by layer")
+            s_a = fit_scale(out, lp.bits_a)
+            lo, hi = qrange(lp.bits_a)
+            x_q = jnp.clip(jnp.round(out / s_a), lo, hi).astype(jnp.int8)
+        out = run_layer(lp.index, x_q)
+    return out
+
+
+def synthetic_weights(index: int, k: int, n_lut: int, n_dsp: int,
+                      bits_w_lut: int, seed: int | None = None):
+    """Deterministic synthetic (w_lut, s_lut, w_dsp, s_dsp) for a layer.
+
+    Codes span each partition's full quantized range; scales are a
+    0.5..1.5 ramp so column mixups cannot cancel out. The generation
+    depends only on (index-or-seed, k, n_lut, n_dsp, bits), so a
+    multi-device executor sharding these full-layer weights sees
+    exactly what a single-device executor binds (bit-exactness tests).
+    """
+    rng = np.random.default_rng(index if seed is None else seed)
+    lo_w, hi_w = qrange(bits_w_lut)
+    lo_d, hi_d = qrange(4)
+    return (
+        rng.integers(lo_w, hi_w + 1, (k, n_lut)) if n_lut else None,
+        np.linspace(0.5, 1.5, n_lut, dtype=np.float32) if n_lut else None,
+        rng.integers(lo_d, hi_d + 1, (k, n_dsp)) if n_dsp else None,
+        np.linspace(0.5, 1.5, n_dsp, dtype=np.float32) if n_dsp else None,
+    )
+
+
 def bind_synthetic(ex: ExecutorBackend, lp: LayerProgram,
                    seed: int | None = None) -> None:
     """Bind deterministic synthetic weight codes/scales for one layer.
 
     Shared by the CLI ``--execute`` path, the executor benchmark and the
     pass-invariance tests, so the bind_layer contract has one call site
-    to keep current. Codes span each partition's full quantized range;
-    scales are a 0.5..1.5 ramp so column mixups cannot cancel out.
+    to keep current.
     """
-    rng = np.random.default_rng(lp.index if seed is None else seed)
-    k, n_lut, n_dsp = lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut
-    lo_w, hi_w = qrange(lp.bits_w_lut)
-    lo_d, hi_d = qrange(4)
-    ex.bind_layer(
-        lp.index,
-        w_lut=rng.integers(lo_w, hi_w + 1, (k, n_lut)) if n_lut else None,
-        s_lut=np.linspace(0.5, 1.5, n_lut, dtype=np.float32)
-        if n_lut else None,
-        w_dsp=rng.integers(lo_d, hi_d + 1, (k, n_dsp)) if n_dsp else None,
-        s_dsp=np.linspace(0.5, 1.5, n_dsp, dtype=np.float32)
-        if n_dsp else None)
+    w_lut, s_lut, w_dsp, s_dsp = synthetic_weights(
+        lp.index, lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut,
+        lp.bits_w_lut, seed)
+    ex.bind_layer(lp.index, w_lut=w_lut, s_lut=s_lut,
+                  w_dsp=w_dsp, s_dsp=s_dsp)

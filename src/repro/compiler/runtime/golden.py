@@ -95,6 +95,18 @@ class GoldenExecutor(ExecutorBackend):
                         f"{i.ddr_base:#x}, expected segment "
                         f"{act_seg.name}@{act_seg.base:#x}")
                 act_loaded = True
+            elif i.stage_ctrl == 3:                  # cross-device gather
+                # filter-parallel plans (compiler/partition.py) stage
+                # peer activation shards in the previous layer's gather
+                # segment; the data itself arrives via the link (the
+                # executor is handed the gathered activations), so only
+                # the addressing contract is checked here.
+                gname = f"L{lp.index - 1}.gather"
+                mem = self.program.memory
+                if gname not in mem or i.ddr_base != mem[gname].base:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: gather fetch addresses "
+                        f"{i.ddr_base:#x}, expected segment {gname}")
             else:
                 raise ExecutionError(
                     f"L{lp.index} {core_name}: fetch stage_ctrl="

@@ -1,0 +1,159 @@
+"""Multi-device executor: step a fleet of per-device programs.
+
+Executes a :class:`~repro.compiler.partition.MultiDeviceProgram`
+functionally by driving one ordinary backend executor (golden or
+Pallas — any ``runtime.BACKENDS`` entry) per device and performing the
+cross-device hand-offs the bundle's channel edges describe:
+
+  * pipeline plans — activations flow device-to-device in stage order;
+    the boundary requantization is exactly the inter-layer
+    requantization of ``ExecutorBackend.run``, so a pipelined chain is
+    bit-identical to running the single-device program;
+  * filter plans — every device computes its shard of each layer from
+    the same (gathered) full activations; concatenating shards in
+    device order reproduces the single-device split column order
+    exactly, because shards are contiguous in that order by
+    construction (``partition.lower_partitioned``).
+
+The token pairing itself is honored *by construction* of the execution
+order (producers always complete before their edges' consumers run);
+:func:`~repro.compiler.partition.validate_bundle` is run at
+construction so a corrupt bundle fails before execution, not during.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.scheduler import GemmDims
+from repro.compiler.runtime.base import (
+    ExecutorBackend,
+    chain_layers,
+    synthetic_weights,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalLayer:
+    """Full-network view of one layer across the device fleet."""
+    index: int
+    name: str
+    dims: GemmDims         # un-sharded GEMM extents
+    n_lut: int             # full-layer neuron split (sum of shards)
+    bits_w_lut: int
+    bits_a: int
+    depthwise: bool
+    # [(device, local layer index, col_lo, col_hi)] in device order;
+    # col bounds are split-column-order output bounds (filter plans
+    # shard them; pipeline plans own the whole [0, n) range).
+    placements: tuple[tuple[int, int, int, int], ...]
+
+
+class MultiDeviceExecutor:
+    """Functional executor over a compiled multi-device bundle."""
+
+    def __init__(self, bundle, backend: str | type[ExecutorBackend]
+                 = "golden", **backend_kwargs):
+        from repro.compiler.partition import validate_bundle
+        from repro.compiler.runtime import get_backend
+        validate_bundle(bundle)
+        self.bundle = bundle
+        cls = get_backend(backend) if isinstance(backend, str) else backend
+        self.executors = [cls(p, **backend_kwargs) for p in bundle.devices]
+        self.layers = self._global_layers()
+
+    # -- global layer table -------------------------------------------------
+
+    def _global_layers(self) -> list[GlobalLayer]:
+        plan = self.bundle.plan
+        out = []
+        for gi in range(self.bundle.n_layers):
+            owners = self.bundle.placements(gi)
+            if plan.kind == "pipeline":
+                d, li = owners[0]
+                lp = self.bundle.devices[d].layers[li]
+                placements = ((d, li, 0, lp.dims.n),)
+                dims, n_lut = lp.dims, lp.n_lut
+            else:
+                bounds = plan.shards[gi]
+                placements = tuple((d, li, bounds[d], bounds[d + 1])
+                                   for d, li in owners)
+                first = self.bundle.devices[0].layers[gi]
+                dims = GemmDims(first.dims.m, first.dims.k, bounds[-1])
+                n_lut = sum(self.bundle.devices[d].layers[li].n_lut
+                            for d, li in owners)
+                lp = first
+            out.append(GlobalLayer(
+                index=gi, name=lp.name, dims=dims, n_lut=n_lut,
+                bits_w_lut=lp.bits_w_lut, bits_a=lp.bits_a,
+                depthwise=lp.depthwise, placements=placements))
+        return out
+
+    # -- weight binding ------------------------------------------------------
+
+    def bind_layer(self, index: int, w_lut=None, s_lut=None,
+                   w_dsp=None, s_dsp=None) -> None:
+        """Bind *full-layer* weights (split column order: the Eq.-12
+        LUT columns first, then the DSP columns) and shard them onto
+        the owning devices per the plan."""
+        gl = self.layers[index]
+        L = gl.n_lut
+
+        def _cols(w, s, n, what):
+            if n == 0:
+                if w is not None:
+                    raise ValueError(
+                        f"layer {index} has no {what} partition")
+                return None, None
+            w = jnp.asarray(w)
+            s = jnp.asarray(s).reshape(-1)
+            if w.shape[1] != n or s.shape[0] != n:
+                raise ValueError(
+                    f"layer {index} {what} weights must have {n} columns "
+                    f"(full layer), got {w.shape}/{s.shape}")
+            return w, s
+
+        w_lut, s_lut = _cols(w_lut, s_lut, L, "lut")
+        w_dsp, s_dsp = _cols(w_dsp, s_dsp, gl.dims.n - L, "dsp")
+        for d, li, lo, hi in gl.placements:
+            l0, l1 = min(lo, L), min(hi, L)          # lut column overlap
+            d0, d1 = max(lo, L) - L, max(hi, L) - L  # dsp column overlap
+            self.executors[d].bind_layer(
+                li,
+                w_lut=w_lut[:, l0:l1] if l1 > l0 else None,
+                s_lut=s_lut[l0:l1] if l1 > l0 else None,
+                w_dsp=w_dsp[:, d0:d1] if d1 > d0 else None,
+                s_dsp=s_dsp[d0:d1] if d1 > d0 else None)
+
+    def bind_synthetic(self, index: int, seed: int | None = None) -> None:
+        """Full-layer synthetic weights, identical to what
+        ``runtime.bind_synthetic`` binds on the single-device program
+        (same RNG stream over the same full extents) — then sharded."""
+        gl = self.layers[index]
+        w_lut, s_lut, w_dsp, s_dsp = synthetic_weights(
+            gl.index, gl.dims.k, gl.n_lut, gl.dims.n - gl.n_lut,
+            gl.bits_w_lut, seed)
+        self.bind_layer(index, w_lut=w_lut, s_lut=s_lut,
+                        w_dsp=w_dsp, s_dsp=s_dsp)
+
+    # -- execution -----------------------------------------------------------
+
+    def run_layer(self, index: int, x_q) -> jnp.ndarray:
+        """Execute one global layer on full activations ``x_q`` [m, k].
+
+        Returns the *full* fp32 [m, n] output in single-device split
+        column order: shards concatenate in device order (filter), or
+        the owning stage computes the whole layer (pipeline).
+        """
+        gl = self.layers[index]
+        outs = [self.executors[d].run_layer(li, x_q)
+                for d, li, lo, hi in gl.placements if hi > lo]
+        return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+    def run(self, x_q) -> jnp.ndarray:
+        """Chain all global layers (FC-style networks), through the
+        same ``chain_layers`` requantization as ``ExecutorBackend.run``
+        — the cross-device hand-off (pipeline boundary or filter
+        gather) carries exactly what the single-device chain would."""
+        return chain_layers(self.layers, self.run_layer, x_q)

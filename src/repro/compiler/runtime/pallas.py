@@ -21,6 +21,15 @@ fall back to the vectorized jnp oracles — still orders of magnitude
 faster than the interpreter's per-tile loop. ``mode`` is forwarded to
 the kernel wrappers ("auto" | "kernel" | "ref").
 
+Per-program JIT cache: every distinct ``(program fingerprint, mode)``
+gets one table of jitted per-partition callables, shared across
+executor instances (class-level LRU). The fingerprint hashes the
+encoded instruction words, which carry every GEMM extent — so it keys
+the sequence length too — and repeated executions of the same compiled
+program (serving hot paths, repeated ``--execute`` runs in one
+process, benchmark loops) reuse the traced executables instead of
+retracing layer by layer.
+
 Timing/contract checks are *off* by default here (that is the golden
 backend's job); pass ``check_timing=True`` to keep the per-core
 scheduler validation (``ExecutorBackend._check_stream``) on the fast
@@ -28,6 +37,10 @@ path too.
 """
 from __future__ import annotations
 
+import collections
+import threading
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import isa
@@ -36,19 +49,80 @@ from repro.compiler.program import CoreProgram, LayerProgram
 from repro.compiler.runtime.base import ExecutorBackend
 
 
+def _make_lut_fn(bits: int, mode: str):
+    def f(x_q, w_codes, w_scales):
+        return kops.bitserial_matmul(x_q, w_codes, w_scales, bits,
+                                     mode=mode)
+    return jax.jit(f)
+
+
+def _make_dsp_fn(mode: str):
+    def f(x_q, w_codes, w_scales):
+        return kops.int4_matmul(x_q, w_codes, w_scales, mode=mode)
+    return jax.jit(f)
+
+
 class PallasExecutor(ExecutorBackend):
-    """One batched kernel call per layer partition."""
+    """One batched (jitted, program-cached) kernel call per partition."""
 
     name = "pallas"
+
+    #: (program fingerprint, mode) -> {(core, bits): jitted fn}; LRU
+    #: over programs, shared across instances so re-executing the same
+    #: compiled program skips retracing.
+    _jit_cache: "collections.OrderedDict[tuple, dict]" = \
+        collections.OrderedDict()
+    _jit_cache_max = 16
+    _jit_cache_lock = threading.Lock()
+    _cache_hits = 0
+    _cache_misses = 0
 
     def __init__(self, program, check_timing: bool = False,
                  mode: str = "auto"):
         super().__init__(program, check_timing=check_timing)
         self.mode = mode
+        self._fns = self._program_fns(program, mode)
+
+    @classmethod
+    def _program_fns(cls, program, mode: str) -> dict:
+        key = (program.fingerprint(), mode)
+        with cls._jit_cache_lock:
+            fns = cls._jit_cache.get(key)
+            if fns is not None:
+                cls._jit_cache.move_to_end(key)
+                cls._cache_hits += 1
+                return fns
+            cls._cache_misses += 1
+            fns = {}
+            cls._jit_cache[key] = fns
+            while len(cls._jit_cache) > cls._jit_cache_max:
+                cls._jit_cache.popitem(last=False)
+            return fns
+
+    @classmethod
+    def cache_info(cls) -> dict:
+        with cls._jit_cache_lock:
+            return {"programs": len(cls._jit_cache),
+                    "hits": cls._cache_hits,
+                    "misses": cls._cache_misses,
+                    "maxsize": cls._jit_cache_max}
+
+    @classmethod
+    def cache_clear(cls) -> None:
+        with cls._jit_cache_lock:
+            cls._jit_cache.clear()
+            cls._cache_hits = cls._cache_misses = 0
 
     def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
                   w_codes, w_scales) -> jnp.ndarray:
         if cp.core == isa.CoreSel.LUT:
-            return kops.bitserial_matmul(x_q, w_codes, w_scales,
-                                         lp.bits_w_lut, mode=self.mode)
-        return kops.int4_matmul(x_q, w_codes, w_scales, mode=self.mode)
+            key = ("lut", lp.bits_w_lut)
+            fn = self._fns.get(key)
+            if fn is None:
+                fn = self._fns[key] = _make_lut_fn(lp.bits_w_lut, self.mode)
+        else:
+            key = ("dsp", 4)
+            fn = self._fns.get(key)
+            if fn is None:
+                fn = self._fns[key] = _make_dsp_fn(self.mode)
+        return fn(x_q, w_codes, w_scales)

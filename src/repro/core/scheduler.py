@@ -324,7 +324,8 @@ class ProgramSim:
         return agg
 
 
-def simulate_program(prog, opt_level: int | None = None) -> ProgramSim:
+def simulate_program(prog, opt_level: int | None = None,
+                     batches: int = 1) -> "ProgramSim":
     """Run a compiled ``repro.compiler.Program`` through the event-driven
     engine model, layer by layer (inter-layer synchronous, §3.1): the
     compiler is the single source of truth for the streams; this is the
@@ -334,7 +335,20 @@ def simulate_program(prog, opt_level: int | None = None) -> ProgramSim:
     ``repro.compiler.passes`` pipeline at that level, so optimized
     streams are exactly what gets timed — `-O0` vs `-O1` latency deltas
     come from this one entry point.
+
+    A ``repro.compiler.partition.MultiDeviceProgram`` dispatches to the
+    cross-device makespan aggregation instead (per-device event-driven
+    sims + the plan's link-latency model), returning a ``BundleSim``;
+    ``batches`` then sets how many back-to-back inputs the makespan
+    covers (pipeline plans overlap them across stages); for a plain
+    single-device program ``batches`` is ignored (its makespan for B
+    inputs is just ``B * total_cycles``).
     """
+    if hasattr(prog, "devices"):     # MultiDeviceProgram bundle
+        from repro.compiler.partition import optimize_bundle, simulate_bundle
+        if opt_level is not None:
+            prog = optimize_bundle(prog, opt_level, validate=False)
+        return simulate_bundle(prog, batches=batches)
     if opt_level is not None:
         from repro.compiler.passes import optimize_program
         prog = optimize_program(prog, opt_level, validate=False)

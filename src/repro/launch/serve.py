@@ -7,11 +7,20 @@ and token throughput.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --smoke --batch 8 --prompt-len 64 --new-tokens 32
+
+Accelerator program cache: serving hot paths that ship compiled ISA
+programs to accelerator workers reuse serialized ``N3HPROG1`` /
+``N3HBUND1`` images from an in-process LRU keyed by the full compile
+key (arch, device, bits, ratio, opt level, seq len, partition plan)
+instead of re-lowering the network per request —
+:func:`compiled_program_image` is the single entry point.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
+import threading
 import time
 
 import jax
@@ -23,6 +32,90 @@ from repro.launch.mesh import make_host_mesh
 from repro.models.lm import HeteroQuantConfig
 from repro.parallel.sharding import DEFAULT_RULES
 from repro.serve.engine import make_cache, make_decode_fn, make_prefill_fn
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program LRU (serving-time N3HPROG1/N3HBUND1 reuse)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramKey:
+    """Full compile identity of a servable accelerator program."""
+    arch: str
+    device: str = "XC7Z020"
+    bits_w: int = 4
+    bits_a: int = 4
+    ratio: float | None = None
+    opt_level: int = 1
+    seq_len: int = 64
+    devices: int = 1
+    partition: str | None = None
+
+
+class ProgramCache:
+    """Thread-safe LRU of compiled program images.
+
+    Values are the serialized images (``N3HPROG1`` for single-device
+    keys, ``N3HBUND1`` for multi-device plans) — deterministic and
+    bit-exact, so they can be shipped to workers byte-for-byte. A miss
+    lowers the network through ``repro.compiler`` once; every further
+    request under the same key is a dictionary hit.
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._images: "collections.OrderedDict[ProgramKey, bytes]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: ProgramKey) -> bytes:
+        with self._lock:
+            image = self._images.get(key)
+            if image is not None:
+                self._images.move_to_end(key)
+                self.hits += 1
+                return image
+        image = self._compile(key)
+        with self._lock:
+            self.misses += 1
+            self._images[key] = image
+            while len(self._images) > self.maxsize:
+                self._images.popitem(last=False)
+        return image
+
+    @staticmethod
+    def _compile(key: ProgramKey) -> bytes:
+        from repro.compiler import (asm, compile_network)
+        prog = compile_network(
+            key.arch, device=key.device, bits_w=key.bits_w,
+            bits_a=key.bits_a, ratio=key.ratio, seq_len=key.seq_len,
+            opt_level=key.opt_level, devices=key.devices,
+            partition=key.partition)
+        if hasattr(prog, "devices"):
+            return asm.to_bundle_binary(prog)
+        return asm.to_binary(prog)
+
+    def info(self) -> dict:
+        with self._lock:
+            return {"programs": len(self._images), "hits": self.hits,
+                    "misses": self.misses, "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._images.clear()
+            self.hits = self.misses = 0
+
+
+#: process-wide cache; serving code and tests share it.
+PROGRAM_CACHE = ProgramCache()
+
+
+def compiled_program_image(key: ProgramKey) -> bytes:
+    """Serialized accelerator program for ``key`` (LRU-cached)."""
+    return PROGRAM_CACHE.get(key)
 
 
 def main() -> None:
@@ -38,6 +131,12 @@ def main() -> None:
     ap.add_argument("--w-bits", type=int, default=4)
     ap.add_argument("--ratio", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--accel-devices", type=int, default=1,
+                    help="accelerator count for the compiled ISA program "
+                         "image shipped to workers (--quantize path)")
+    ap.add_argument("--accel-partition", choices=("pipeline", "filter"),
+                    default=None,
+                    help="partition plan for --accel-devices > 1")
     args = ap.parse_args()
 
     arch = registry.get(args.arch)
@@ -89,6 +188,21 @@ def main() -> None:
         t_decode = time.time() - t0
 
         total_new = args.batch * args.new_tokens
+        if args.quantize:
+            # the deployable ISA program for this serving config — the
+            # LRU means repeat requests under the same key ship the
+            # cached image instead of re-lowering the network
+            key = ProgramKey(
+                arch=args.arch, bits_w=args.w_bits, bits_a=8,
+                ratio=args.ratio, opt_level=1, seq_len=args.prompt_len,
+                devices=args.accel_devices,
+                partition=args.accel_partition)
+            t0 = time.time()
+            image = compiled_program_image(key)
+            t_img = time.time() - t0
+            print(f"# accel program {image[:8].decode()} "
+                  f"{len(image)} B in {t_img * 1e3:.1f} ms "
+                  f"(cache {PROGRAM_CACHE.info()})")
         print(f"# arch={arch.model.name} quantized={args.quantize}")
         print(f"prefill: {t_prefill * 1e3:8.1f} ms "
               f"({args.batch * args.prompt_len / max(t_prefill, 1e-9):.0f} tok/s)")

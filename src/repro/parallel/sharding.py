@@ -99,6 +99,13 @@ DEFAULT_RULES = AxisRules((
 # sharded over the model axis, combined with an online-softmax reduction.
 KV_SHARDED_RULES = DEFAULT_RULES.replace(kv_seq=("model",))
 
+#: Logical axes whose sharding means "split output filters/columns".
+#: Single source of truth shared with the NN→ISA compiler: rule tables
+#: that map any of these onto a mesh axis translate to filter-parallel
+#: (shard-N) multi-device plans in ``repro.compiler.partition``, while
+#: a sharded "layers" axis translates to pipeline stages.
+FILTER_PARALLEL_AXES = ("mlp", "heads", "experts", "vocab")
+
 
 def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))

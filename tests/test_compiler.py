@@ -28,7 +28,7 @@ from repro.compiler import (
     network_layers,
     to_binary,
 )
-from repro.compiler.executor import ExecutionError
+from repro.compiler.runtime import ExecutionError
 from repro.core.hetero_linear import (
     HeteroLinearConfig,
     apply_deploy,

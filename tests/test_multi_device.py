@@ -1,0 +1,470 @@
+"""Multi-device program partitioning: plans, bundles, executors.
+
+The contract under test (ISSUE 3 acceptance surface):
+  * a 1-device plan of either kind reproduces the legacy single-program
+    path bit for bit;
+  * ``N3HBUND1`` bundle images round-trip bit-exactly (both plan kinds,
+    -O0 and -O1);
+  * per-device pass invariance: multi-device golden outputs are
+    bit-identical at -O0 and -O1, and bit-identical to the
+    single-device program's outputs (per layer and FC-chained);
+  * cross-device token pairing is validated — a dropped or duplicated
+    ``*.xdev`` sync raises ``PartitionError``;
+  * the simulated 2-device pipeline makespan beats 1 device on a
+    registry arch for a batched input stream;
+  * a registry LM and a CNN both compile under ``--devices 2`` in both
+    partition modes;
+  * satellites: the PallasExecutor per-program JIT cache and the
+    serving-time compiled-image LRU.
+"""
+import importlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.compiler import (
+    GemmLayer,
+    GoldenExecutor,
+    MultiDeviceExecutor,
+    PallasExecutor,
+    PartitionError,
+    bind_synthetic,
+    compile_network,
+    derive_plan,
+    from_bundle_binary,
+    kind_from_rules,
+    lower_network,
+    lower_partitioned,
+    optimize_bundle,
+    to_bundle_binary,
+    validate_bundle,
+)
+from repro.compiler.cli import main as cli_main
+from repro.compiler.program import CROSS_DEVICE_CHANNELS
+from repro.core import isa
+from repro.core.scheduler import (
+    XC7Z020,
+    DspCoreConfig,
+    GemmDims,
+    LutCoreConfig,
+    simulate_program,
+)
+from repro.parallel.sharding import DEFAULT_RULES
+
+LUT = LutCoreConfig(m=8, n=16, k=128)
+DSP = DspCoreConfig(n_reg_row_a=13)
+KINDS = ("pipeline", "filter")
+
+#: FC-chained toy network (n_i == k_{i+1}) so run() exercises the
+#: cross-device hand-off end to end, including boundary requantization.
+CHAIN = [GemmLayer("fc0", GemmDims(24, 32, 48)),
+         GemmLayer("fc1", GemmDims(24, 48, 40)),
+         GemmLayer("fc2", GemmDims(24, 40, 36)),
+         GemmLayer("fc3", GemmDims(24, 36, 20))]
+
+
+def _chain_bundle(kind, n_devices, opt_level=0, layers=CHAIN):
+    plan = derive_plan(layers, n_devices, kind)
+    return lower_partitioned("toy", layers, plan, LUT, DSP, XC7Z020,
+                             bits_w_lut=6, bits_a=4, opt_level=opt_level)
+
+
+def _single(layers=CHAIN, opt_level=0):
+    return lower_network("toy", layers, LUT, DSP, XC7Z020,
+                         bits_w_lut=6, bits_a=4, opt_level=opt_level)
+
+
+def _bound_single(prog):
+    ex = GoldenExecutor(prog)
+    for lp in prog.layers:
+        bind_synthetic(ex, lp)
+    return ex
+
+
+def _bound_multi(mdp, backend="golden"):
+    mex = MultiDeviceExecutor(mdp, backend=backend)
+    for gi in range(mdp.n_layers):
+        mex.bind_synthetic(gi)
+    return mex
+
+
+def _x(m=24, k=32, seed=0):
+    return np.random.default_rng(seed).integers(
+        -8, 8, (m, k)).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+
+def test_kind_derived_from_axis_rules():
+    # stock rules shard mlp/heads over "model" -> filter-parallel
+    assert kind_from_rules(DEFAULT_RULES) == "filter"
+    # rules that shard the layer axis ask for pipeline stages
+    assert kind_from_rules(
+        DEFAULT_RULES.replace(layers=("model",))) == "pipeline"
+    # no sharded axes at all -> pipeline (stage parallelism needs no
+    # intra-layer splits)
+    bare = DEFAULT_RULES.replace(**{n: () for n in
+                                    ("mlp", "heads", "experts", "vocab")})
+    assert kind_from_rules(bare) == "pipeline"
+
+
+def test_pipeline_stages_balanced_and_contiguous():
+    plan = derive_plan(CHAIN, 2, "pipeline")
+    (a0, a1), (b0, b1) = plan.stages
+    assert a0 == 0 and a1 == b0 and b1 == len(CHAIN)
+    with pytest.raises(PartitionError):
+        derive_plan(CHAIN, 5, "pipeline")   # more devices than layers
+
+
+def test_filter_shards_cover_every_layer():
+    plan = derive_plan(CHAIN, 2, "filter")
+    for gl, bounds in zip(CHAIN, plan.shards):
+        assert bounds[0] == 0 and bounds[-1] == gl.dims.n
+        assert all(b1 > b0 for b0, b1 in zip(bounds, bounds[1:]))
+    with pytest.raises(PartitionError):
+        derive_plan([GemmLayer("n1", GemmDims(4, 4, 1))], 2, "filter")
+
+
+# ---------------------------------------------------------------------------
+# 1-device plan == legacy single-program path, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_one_device_plan_is_legacy_program(kind):
+    single = _single()
+    mdp = _chain_bundle(kind, 1)
+    assert mdp.n_devices == 1 and not mdp.edges
+    assert mdp.devices[0] == single
+    assert mdp.devices[0].words() == single.words()
+
+
+def test_lower_network_plan_path():
+    # lower_network's plan= kwarg is the multi-device entry point
+    plan = derive_plan(CHAIN, 2, "pipeline")
+    mdp = lower_network("toy", CHAIN, LUT, DSP, XC7Z020, bits_w_lut=6,
+                        bits_a=4, plan=plan)
+    assert mdp.n_devices == 2 and mdp.plan is plan
+    assert mdp == _chain_bundle("pipeline", 2)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_one_device_plan_is_legacy_program_lm(kind):
+    single = compile_network("llama3.2-1b", seq_len=4)
+    mdp = compile_network("llama3.2-1b", seq_len=4, devices=1,
+                          partition=kind)
+    assert mdp.devices[0] == single
+
+
+# ---------------------------------------------------------------------------
+# Bundle image round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("opt", (0, 1))
+def test_bundle_binary_round_trip(kind, opt):
+    mdp = _chain_bundle(kind, 2, opt_level=opt)
+    blob = to_bundle_binary(mdp)
+    assert blob[:8] == b"N3HBUND1"
+    rt = from_bundle_binary(blob)
+    assert rt == mdp
+    assert to_bundle_binary(rt) == blob    # canonical re-pack
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_bundle_round_trip_registry_lm(kind):
+    mdp = compile_network("llama3.2-1b", seq_len=4, devices=2,
+                          partition=kind, opt_level=1)
+    rt = from_bundle_binary(to_bundle_binary(mdp))
+    assert rt == mdp
+    validate_bundle(rt)
+
+
+def test_bundle_binary_rejects_garbage():
+    with pytest.raises(ValueError):
+        from_bundle_binary(b"NOTABUND" + b"\x00" * 16)
+    blob = to_bundle_binary(_chain_bundle("pipeline", 2))
+    with pytest.raises(ValueError):
+        from_bundle_binary(blob + b"\x00")   # trailing bytes
+    # structurally valid JSON header with missing keys is still a
+    # ValueError, not a KeyError leak
+    import struct
+    with pytest.raises(ValueError):
+        from_bundle_binary(b"N3HBUND1" + struct.pack("<I", 2) + b"{}"
+                           + struct.pack("<I", 0))
+
+
+def test_gather_dma_offsets_are_staging_ordinals():
+    # a device's gather fetches index the staged peer shards 0..D-2 in
+    # device order, not raw peer ids (segment-relative convention)
+    mdp = _chain_bundle("filter", 3)
+    for prog in mdp.devices:
+        for lp in prog.layers[1:]:
+            cp = lp.lut if lp.lut is not None else lp.dsp
+            offs = [op.instr.ddr_offset for op in cp.streams["fetch"]
+                    if isinstance(op.instr, isa.FetchInstr)
+                    and op.instr.stage_ctrl == 3]
+            assert offs == [0, 1]
+
+
+def test_boundary_bytes_use_consumer_bits():
+    # link transfers are sized at the *consuming* layer's activation
+    # bit-width (what its act fetches and act.in segment are sized at)
+    layers = CHAIN[:2]
+    plan = derive_plan(layers, 2, "pipeline")
+    mdp = lower_partitioned("toy", layers, plan, LUT, DSP, XC7Z020,
+                            bits_w_lut=6, bits_a=[4, 8])
+    g = layers[0].dims
+    assert mdp.edges[0].nbytes == g.m * g.n * 8 // 8
+    fplan = derive_plan(layers, 2, "filter")
+    fmdp = lower_partitioned("toy", layers, fplan, LUT, DSP, XC7Z020,
+                             bits_w_lut=6, bits_a=[4, 8])
+    w1 = fplan.shards[0][1] - fplan.shards[0][0]    # dev1's peer = dev0
+    assert any(e.nbytes == (g.m * w1 * 8 + 7) // 8 for e in fmdp.edges)
+    gather = fmdp.devices[0].memory["L0.gather"]
+    assert gather.size == (g.m * (g.n - w1) * 8 + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# Cross-device token-pairing validation
+# ---------------------------------------------------------------------------
+
+
+def _first_xdev(stream_ops, want_wait):
+    for i, op in enumerate(stream_ops):
+        if (op.channel in CROSS_DEVICE_CHANNELS
+                and isinstance(op.instr, isa.SyncInstr)
+                and bool(op.instr.is_wait) == want_wait):
+            return i
+    raise AssertionError("no cross-device sync found")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_validate_bundle_catches_dropped_send(kind):
+    mdp = _chain_bundle(kind, 2)
+    validate_bundle(mdp)
+    lp = mdp.devices[0].layers[mdp.edges[0].src_layer]
+    cp = lp.lut if lp.lut is not None else lp.dsp
+    i = _first_xdev(cp.streams["result"], want_wait=False)
+    del cp.streams["result"][i]
+    with pytest.raises(PartitionError, match="token pairing"):
+        validate_bundle(mdp)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_validate_bundle_catches_duplicated_wait(kind):
+    mdp = _chain_bundle(kind, 2)
+    e = mdp.edges[0]
+    lp = mdp.devices[e.dst_device].layers[e.dst_layer]
+    cp = lp.lut if lp.lut is not None else lp.dsp
+    i = _first_xdev(cp.streams["fetch"], want_wait=True)
+    cp.streams["fetch"].insert(i, cp.streams["fetch"][i])
+    with pytest.raises(PartitionError, match="token pairing"):
+        validate_bundle(mdp)
+
+
+def test_optimize_bundle_validates_pairing():
+    # passes must never elide cross-device syncs; optimize_bundle
+    # re-validates afterwards, so an -O1 bundle still pairs exactly
+    for kind in KINDS:
+        mdp = optimize_bundle(_chain_bundle(kind, 2), 1)
+        validate_bundle(mdp)
+        for prog in mdp.devices:
+            assert prog.opt_stats     # pipeline actually ran per device
+
+
+# ---------------------------------------------------------------------------
+# Golden execution: multi-device == single-device, -O0 == -O1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_devices", (2, 3))
+def test_chained_run_bit_exact_vs_single(kind, n_devices):
+    ref = np.asarray(_bound_single(_single()).run(_x()))
+    mex = _bound_multi(_chain_bundle(kind, n_devices))
+    assert (np.asarray(mex.run(_x())) == ref).all()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_chained_run_pass_invariant(kind):
+    ref = np.asarray(_bound_multi(_chain_bundle(kind, 2)).run(_x()))
+    opt = _bound_multi(_chain_bundle(kind, 2, opt_level=1))
+    assert (np.asarray(opt.run(_x())) == ref).all()
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_registry_lm_per_layer_bit_exact(kind):
+    single = compile_network("llama3.2-1b", seq_len=4)
+    mdp = compile_network("llama3.2-1b", seq_len=4, devices=2,
+                          partition=kind, opt_level=1)
+    ex = _bound_single(single)
+    mex = _bound_multi(mdp)
+    for gi, lp in enumerate(single.layers):
+        x = _x(lp.dims.m, lp.dims.k, seed=100 + gi)
+        out_s = np.asarray(ex.run_layer(gi, x))
+        out_m = np.asarray(mex.run_layer(gi, x))
+        assert out_s.shape == out_m.shape
+        assert (out_s == out_m).all(), f"layer {gi} ({lp.name}) diverges"
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_pallas_backend_on_bundle_bit_exact(kind):
+    mdp = _chain_bundle(kind, 2, opt_level=1)
+    ref = np.asarray(_bound_multi(mdp).run(_x()))
+    fast = _bound_multi(mdp, backend="pallas")
+    assert (np.asarray(fast.run(_x())) == ref).all()
+
+
+def test_multi_executor_rejects_corrupt_bundle():
+    mdp = _chain_bundle("pipeline", 2)
+    lp = mdp.devices[0].layers[mdp.edges[0].src_layer]
+    cp = lp.lut if lp.lut is not None else lp.dsp
+    del cp.streams["result"][_first_xdev(cp.streams["result"], False)]
+    with pytest.raises(PartitionError):
+        MultiDeviceExecutor(mdp)
+
+
+# ---------------------------------------------------------------------------
+# Simulation: cross-device makespan
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_two_devices_beat_one_on_registry_arch():
+    # the ISSUE acceptance: batched 2-device pipeline makespan < 1 device
+    batches = 8
+    single = compile_network("llama3.2-1b", seq_len=16, opt_level=1)
+    base = simulate_program(single).total_cycles * batches
+    mdp = compile_network("llama3.2-1b", seq_len=16, devices=2,
+                          partition="pipeline", opt_level=1)
+    bs = simulate_program(mdp, batches=batches)
+    assert bs.kind == "pipeline" and bs.batches == batches
+    assert bs.total_cycles < base
+    # first-traversal latency cannot beat a single device (it adds the
+    # link hop); the win is steady-state overlap
+    assert bs.interval_cycles < simulate_program(single).total_cycles
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_bundle_sim_structure(kind):
+    mdp = _chain_bundle(kind, 2)
+    bs = simulate_program(mdp, batches=4)
+    assert len(bs.device_sims) == 2
+    assert bs.total_cycles == (bs.latency_cycles
+                               + 3 * bs.interval_cycles)
+    assert bs.n_instructions == sum(s.n_instructions
+                                    for s in bs.device_sims)
+    d = bs.decomposition("lut")
+    assert set(d) == {"l_wait", "l_run", "l_sig", "l_rst"}
+
+
+def test_simulate_program_opt_level_on_bundle():
+    mdp = _chain_bundle("filter", 2)
+    o0 = simulate_program(mdp, batches=1).n_instructions
+    o1 = simulate_program(mdp, opt_level=1, batches=1).n_instructions
+    assert o1 < o0
+
+
+# ---------------------------------------------------------------------------
+# CNN coverage + CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_cnn_compiles_two_devices(kind):
+    mdp = compile_network("resnet18", devices=2, partition=kind)
+    validate_bundle(mdp)
+    assert mdp.n_layers == 21
+    if kind == "filter":
+        # every device keeps every layer, sharded on output filters
+        assert all(len(p.layers) == 21 for p in mdp.devices)
+        gather = [s for s in mdp.devices[0].memory.segments
+                  if s.name.endswith(".gather")]
+        assert len(gather) == 20       # one per layer boundary
+    else:
+        assert sum(len(p.layers) for p in mdp.devices) == 21
+
+
+def test_cli_multi_device(capsys):
+    assert cli_main(["llama3.2-1b", "--seq-len", "4", "--devices", "2",
+                     "--partition", "pipeline", "--simulate"]) == 0
+    out = capsys.readouterr().out
+    assert "bundle" in out and "pipeline x2" in out and "simulated" in out
+    assert cli_main(["llama3.2-1b", "--seq-len", "4", "--devices", "2",
+                     "--partition", "filter", "-O", "1", "--execute"]) == 0
+    out = capsys.readouterr().out
+    assert "filter x2" in out and "executed" in out
+    assert cli_main(["llama3.2-1b", "--devices", "0"]) == 2
+
+
+def test_cli_bundle_bin_round_trip(tmp_path):
+    path = tmp_path / "bundle.n3h"
+    assert cli_main(["llama3.2-1b", "--seq-len", "4", "--devices", "2",
+                     "--partition", "filter", "--format", "bin",
+                     "-o", str(path)]) == 0
+    mdp = from_bundle_binary(path.read_bytes())
+    assert mdp.n_devices == 2
+    validate_bundle(mdp)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: executor JIT cache, serving program LRU, shim deprecation
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_jit_cache_shared_across_instances():
+    PallasExecutor.cache_clear()
+    prog = _single()
+    a = PallasExecutor(prog)
+    info = PallasExecutor.cache_info()
+    assert info["misses"] == 1 and info["hits"] == 0
+    b = PallasExecutor(prog)
+    info = PallasExecutor.cache_info()
+    assert info["hits"] == 1 and info["programs"] == 1
+    assert a._fns is b._fns               # same jitted-table object
+    other = lower_network("toy2", CHAIN[:2], LUT, DSP, XC7Z020,
+                          bits_w_lut=6, bits_a=4)
+    PallasExecutor(other)
+    assert PallasExecutor.cache_info()["programs"] == 2
+    PallasExecutor.cache_clear()
+
+
+def test_serving_program_cache_lru():
+    from repro.launch.serve import (PROGRAM_CACHE, ProgramKey,
+                                    compiled_program_image)
+    PROGRAM_CACHE.clear()
+    key = ProgramKey(arch="llama3.2-1b", seq_len=4, opt_level=0)
+    img1 = compiled_program_image(key)
+    assert img1[:8] == b"N3HPROG1"
+    img2 = compiled_program_image(key)
+    assert img1 is img2                   # cache hit, no re-lowering
+    info = PROGRAM_CACHE.info()
+    assert info["hits"] == 1 and info["misses"] == 1
+    bkey = ProgramKey(arch="llama3.2-1b", seq_len=4, opt_level=0,
+                      devices=2, partition="pipeline")
+    assert compiled_program_image(bkey)[:8] == b"N3HBUND1"
+    assert PROGRAM_CACHE.info()["misses"] == 2
+    PROGRAM_CACHE.clear()
+
+
+def test_serving_program_cache_evicts():
+    from repro.launch.serve import ProgramCache, ProgramKey
+    cache = ProgramCache(maxsize=1)
+    k0 = ProgramKey(arch="llama3.2-1b", seq_len=4, opt_level=0)
+    k1 = ProgramKey(arch="llama3.2-1b", seq_len=8, opt_level=0)
+    cache.get(k0)
+    cache.get(k1)                         # evicts k0
+    cache.get(k0)                         # miss again
+    assert cache.info() == {"programs": 1, "hits": 0, "misses": 3,
+                            "maxsize": 1}
+
+
+def test_executor_shim_warns_deprecation():
+    sys.modules.pop("repro.compiler.executor", None)
+    with pytest.warns(DeprecationWarning, match="compiler.runtime"):
+        importlib.import_module("repro.compiler.executor")
