@@ -9,6 +9,10 @@ backends:
   * one registry LM smoke program executed functionally on both
     backends: golden interpreter vs batched Pallas fast path, wall
     clock + speedup + a bit-exactness flag;
+  * whole-CNN inference rows: resnet18 and mobilenet_v2 executed end
+    to end through the spatial im2col chain (depthwise grouped GEMMs
+    included) on the pallas backend, with a golden bit-exactness
+    cross-check on the reduced smoke variant;
   * multi-device scaling: the same LM compiled under 1 -> 2 -> 4-device
     pipeline and filter plans, with the cross-device makespan (link
     latency included) and speedup vs one device for a batched input
@@ -148,6 +152,52 @@ def bench_backends(seq_len: int = 64) -> tuple[str, float, str]:
             json.dumps(bench, sort_keys=True))
 
 
+def bench_cnn_execute(arch: str, smoke: bool = False
+                      ) -> tuple[str, float, str]:
+    """Whole-CNN inference through the compiled program: a synthetic
+    quantized image chained end to end (im2col staging, depthwise
+    grouped GEMMs, pool glue, shortcut sources, inter-layer requant).
+
+    Full mode runs the full-size 224 network on the pallas backend;
+    ``--smoke`` runs the reduced geometry-consistent variant and also
+    cross-checks golden-vs-pallas bit-exactness.
+    """
+    kw = {"in_hw": 28, "width": 0.25} if smoke else {}
+    prog = compile_network(arch, opt_level=1, **kw)
+    geo0 = prog.layers[0].geometry
+    rng = np.random.default_rng(0)
+    x_q = rng.integers(-8, 8, geo0.in_shape).astype(np.int8)
+
+    pallas = PallasExecutor(prog)
+    for lp in prog.layers:
+        bind_synthetic(pallas, lp, seed=lp.index)
+    pallas.run(x_q)                       # warm the jit tables
+    t0 = time.time()
+    out_p = np.asarray(pallas.run(x_q))
+    pallas_s = time.time() - t0
+
+    bench = {
+        "BENCH": "compiler.cnn_execute",
+        "network": arch,
+        "in_hw": geo0.in_hw,
+        "layers": len(prog.layers),
+        "depthwise_layers": sum(lp.depthwise for lp in prog.layers),
+        "logits": list(out_p.shape),
+        "abs_sum": float(np.abs(out_p).sum()),
+        "pallas_s": round(pallas_s, 4),
+    }
+    if smoke:
+        golden = GoldenExecutor(prog)
+        for lp in prog.layers:
+            bind_synthetic(golden, lp, seed=lp.index)
+        t1 = time.time()
+        out_g = np.asarray(golden.run(x_q))
+        bench["golden_s"] = round(time.time() - t1, 4)
+        bench["bit_exact"] = bool((out_g == out_p).all())
+    return (f"compiler.cnn_execute.{arch}", 1e6 * pallas_s,
+            json.dumps(bench, sort_keys=True))
+
+
 def bench_multi_device(seq_len: int = 64,
                        batches: int = 8) -> tuple[str, float, str]:
     """1 -> 2 -> 4-device scaling of one registry LM program: simulated
@@ -189,6 +239,8 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = [bench_network(name, kw)
             for name, kw in (SMOKE_NETWORKS if smoke else NETWORKS)]
     rows.append(bench_backends(seq_len=16 if smoke else 64))
+    for arch in ("resnet18", "mobilenet_v2"):
+        rows.append(bench_cnn_execute(arch, smoke=smoke))
     rows.append(bench_multi_device(seq_len=16 if smoke else 64))
     return rows
 

@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 
 from repro.configs import registry
 

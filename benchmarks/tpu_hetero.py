@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.tpu_cost import V5E, hetero_gemm_cost, solve_tpu_split
+from repro.core.tpu_cost import hetero_gemm_cost, solve_tpu_split
 
 
 GEMMS = {

@@ -68,9 +68,13 @@ from repro.compiler.runtime import (
     LayerWeights,
     MultiDeviceExecutor,
     PallasExecutor,
-    UnsupportedLayerError,
+    apply_pool,
     bind_synthetic,
+    chain_layers,
     get_backend,
+    im2col_patches,
+    requantize,
+    spatialize,
     synthetic_weights,
 )
 from repro.compiler.lower import (
@@ -86,6 +90,7 @@ from repro.compiler.networks import (
     network_layers,
 )
 from repro.compiler.program import (
+    ConvGeometry,
     CoreProgram,
     GemmLayer,
     LayerProgram,
@@ -109,10 +114,10 @@ __all__ = [
     "optimize_program", "pipeline_for",
     "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
     "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
-    "UnsupportedLayerError", "bind_synthetic", "get_backend",
-    "synthetic_weights",
+    "apply_pool", "bind_synthetic", "chain_layers", "get_backend",
+    "im2col_patches", "requantize", "spatialize", "synthetic_weights",
     "LayerAddrs", "lower_dsp_layer", "lower_lut_layer", "lower_network",
     "solve_split_dims", "list_networks", "lm_gemm_layers", "network_layers",
-    "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap", "Program",
-    "ProgramStats", "Segment", "channel_of",
+    "ConvGeometry", "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap",
+    "Program", "ProgramStats", "Segment", "channel_of",
 ]

@@ -64,11 +64,11 @@ from repro.compiler.program import (
     CHANNEL_FLAGS,
     CORE_NAMES,
     ENGINES,
+    ConvGeometry,
     CoreProgram,
     LayerProgram,
     MemoryMap,
     Program,
-    Segment,
     channel_of,
 )
 
@@ -151,6 +151,47 @@ def parse_instr(line: str) -> Op:
 
 
 # ---------------------------------------------------------------------------
+# Conv geometry (de)serialization (shared by text and binary forms)
+# ---------------------------------------------------------------------------
+
+#: positional field order of the compact geometry record
+_GEOM_FIELDS = ("kernel", "stride", "pad", "in_hw", "out_hw", "c_in",
+                "c_out", "src_offset", "pool")
+
+
+def _geom_record(geom: ConvGeometry | None) -> list | None:
+    if geom is None:
+        return None
+    return [getattr(geom, f) for f in _GEOM_FIELDS]
+
+
+def _geom_from_record(rec) -> ConvGeometry | None:
+    if rec is None:
+        return None
+    vals = dict(zip(_GEOM_FIELDS, rec))
+    vals["pool"] = str(vals["pool"])
+    return ConvGeometry(**{f: (int(v) if f != "pool" else v)
+                           for f, v in vals.items()})
+
+
+def _fmt_geom(geom: ConvGeometry) -> str:
+    """Compact comma-joined positional form for the ``.layer`` line;
+    an empty pool renders as ``-``."""
+    rec = _geom_record(geom)
+    rec[-1] = rec[-1] or "-"
+    return ",".join(str(v) for v in rec)
+
+
+def _parse_geom(text: str) -> ConvGeometry:
+    parts = text.split(",")
+    if len(parts) != len(_GEOM_FIELDS):
+        raise ValueError(f"geometry record needs {len(_GEOM_FIELDS)} "
+                         f"fields, got {len(parts)}")
+    parts[-1] = "" if parts[-1] == "-" else parts[-1]
+    return _geom_from_record(parts)
+
+
+# ---------------------------------------------------------------------------
 # Config (de)serialization helpers
 # ---------------------------------------------------------------------------
 
@@ -191,10 +232,12 @@ def disassemble(prog: Program) -> str:
     for seg in prog.memory.segments:
         out.append(f".segment {seg.name} base={seg.base:#x} size={seg.size}")
     for lp in prog.layers:
+        geom = "" if lp.geometry is None \
+            else f" geom={_fmt_geom(lp.geometry)}"
         out.append(f".layer {lp.index} name={lp.name} m={lp.dims.m} "
                    f"k={lp.dims.k} n={lp.dims.n} n_lut={lp.n_lut} "
                    f"bits_w={lp.bits_w_lut} bits_a={lp.bits_a} "
-                   f"dw={int(lp.depthwise)}")
+                   f"dw={int(lp.depthwise)}{geom}")
         for cp in lp.cores():
             toks = ",".join(f"{ch}:{n}" for ch, n
                             in sorted(cp.initial_tokens.items()))
@@ -252,7 +295,9 @@ def assemble(text: str) -> Program:
                     dims=GemmDims(int(kv["m"]), int(kv["k"]), int(kv["n"])),
                     n_lut=int(kv["n_lut"]), bits_w_lut=int(kv["bits_w"]),
                     bits_a=int(kv["bits_a"]), depthwise=bool(int(kv["dw"])),
-                    lut=None, dsp=None))
+                    lut=None, dsp=None,
+                    geometry=_parse_geom(kv["geom"])
+                    if "geom" in kv else None))
                 cur_core = cur_stream = None
             elif line.startswith(".core"):
                 toks = line.split()
@@ -307,6 +352,7 @@ def to_binary(prog: Program) -> bytes:
             "dims": [lp.dims.m, lp.dims.k, lp.dims.n],
             "n_lut": lp.n_lut, "bits_w": lp.bits_w_lut, "bits_a": lp.bits_a,
             "dw": int(lp.depthwise),
+            "geom": _geom_record(lp.geometry),
             "cores": [{
                 "core": CORE_NAMES[cp.core],
                 "tokens": dict(sorted(cp.initial_tokens.items())),
@@ -359,7 +405,8 @@ def _parse_binary(data: bytes) -> Program:
             index=lm["index"], name=lm["name"],
             dims=GemmDims(*lm["dims"]), n_lut=lm["n_lut"],
             bits_w_lut=lm["bits_w"], bits_a=lm["bits_a"],
-            depthwise=bool(lm["dw"]), lut=None, dsp=None)
+            depthwise=bool(lm["dw"]), lut=None, dsp=None,
+            geometry=_geom_from_record(lm.get("geom")))
         for cm in lm["cores"]:
             streams = {}
             for engine in ENGINES:

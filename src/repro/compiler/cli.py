@@ -63,6 +63,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fixed LUT filter ratio; default solves Eq. 12")
     p.add_argument("--seq-len", type=int, default=64,
                    help="token count for LM archs")
+    p.add_argument("--in-hw", type=int, default=None,
+                   help="CNN input size (default 224); reduced variants "
+                        "stay geometry-consistent end to end")
+    p.add_argument("--width", type=float, default=None,
+                   help="CNN channel-width multiplier (default 1.0)")
     p.add_argument("--lut-m", type=int, default=8)
     p.add_argument("--lut-n", type=int, default=16)
     p.add_argument("--lut-k", type=int, default=128)
@@ -96,8 +101,8 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--execute", action="store_true",
                    help="also execute the program functionally with "
                         "synthetic weights via --backend (summary mode); "
-                        "unsupported (depthwise) layers are skipped and "
-                        "reported")
+                        "CNN programs run end to end through the spatial "
+                        "im2col chain, LM programs layer by layer")
     p.add_argument("-o", "--output", default=None,
                    help="write asm/bin to a file instead of stdout")
     return p
@@ -108,18 +113,20 @@ def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
                     seq_len: int = 64, lut_m: int = 8, lut_n: int = 16,
                     lut_k: int = 128, opt_level: int = 0,
                     devices: int = 1, partition: str | None = None,
-                    link_latency: int | None = None):
+                    link_latency: int | None = None,
+                    in_hw: int | None = None, width: float | None = None):
     """Programmatic entry point used by the CLI, benchmarks and tests.
 
     ``devices > 1`` (or an explicit ``partition`` kind) compiles a
     multi-device ``MultiDeviceProgram`` bundle under a plan derived by
     ``partition.derive_plan``; otherwise the legacy single
-    ``Program``.
+    ``Program``. ``in_hw``/``width`` scale the CNN workloads to their
+    reduced geometry-consistent variants (ignored for LM archs).
     """
     dev = DEVICES[device]
     lut_cfg = LutCoreConfig(m=lut_m, n=lut_n, k=lut_k)
     dsp_cfg = DspCoreConfig(n_reg_row_a=DspCoreConfig.rows_for_device(dev))
-    layers = network_layers(name, seq_len=seq_len)
+    layers = network_layers(name, seq_len=seq_len, in_hw=in_hw, width=width)
     n_luts = None
     if ratio is not None:
         n_luts = [int(round(ratio * gl.dims.n)) for gl in layers]
@@ -211,15 +218,20 @@ def summarize(prog, simulate: bool = False) -> str:
 
 
 def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
-    """Run every supported layer functionally with synthetic weights.
+    """Execute the program functionally with synthetic weights.
 
-    Depthwise layers have no functional executor semantics; they are
-    skipped and reported instead of crashing the whole CNN program.
+    Conv programs (every layer carries an im2col geometry — the CNN
+    workloads) run *end to end*: a synthetic input image is quantized
+    to the first layer's activation bits and chained through the whole
+    network (im2col staging, depthwise grouped GEMMs, pooling glue,
+    shortcut sources, inter-layer requantization). Other programs (the
+    LM frontends, whose q/k/v projections fan out rather than chain)
+    are driven layer by layer on fresh synthetic activations.
 
     Accepts a single ``Program`` or a multi-device bundle; the bundle
-    path drives the same per-layer synthetic weights and activations
-    through ``MultiDeviceExecutor``, so its checksum is bit-identical
-    to the single-device run of the same network.
+    path drives the same synthetic weights and activations through
+    ``MultiDeviceExecutor``, so its checksum is bit-identical to the
+    single-device run of the same network.
     """
     is_bundle = hasattr(prog, "devices")
     if is_bundle:
@@ -229,34 +241,41 @@ def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
         ex = get_backend(backend)(prog)
         layers = prog.layers
     rng = np.random.default_rng(seed)
-    skipped: list[str] = []
-    checksum = 0.0
-    executed = 0
-    t0 = time.time()
+    what = f"{backend} backend" if not is_bundle else \
+        f"{backend} backend x{prog.n_devices} devices"
     for lp in layers:
-        if lp.depthwise:
-            skipped.append(lp.name)
-            continue
         if is_bundle:
             ex.bind_synthetic(lp.index, seed=seed + lp.index)
         else:
             bind_synthetic(ex, lp, seed=seed + lp.index)
-        lo_a, hi_a = qrange(lp.bits_a)
+
+    if layers and all(lp.geometry is not None for lp in layers):
+        # whole-CNN inference: quantized synthetic image through the
+        # spatial chain
+        lp0 = layers[0]
+        lo_a, hi_a = qrange(lp0.bits_a)
         x_q = rng.integers(lo_a, hi_a + 1,
-                           (lp.dims.m, lp.dims.k)).astype(np.int8)
+                           lp0.geometry.in_shape).astype(np.int8)
+        t0 = time.time()
+        logits = np.asarray(ex.run(x_q))
+        dt = time.time() - t0
+        return (f"executed  {len(layers)}/{len(layers)} layers end to "
+                f"end via {what} in {dt:.3f}s "
+                f"(logits [{logits.shape[0]},{logits.shape[1]}], "
+                f"|out| sum {float(np.abs(logits).sum()):.6e})")
+
+    checksum = 0.0
+    t0 = time.time()
+    for lp in layers:
+        lo_a, hi_a = qrange(lp.bits_a)
+        shape = (lp.dims.m, lp.dims.k, lp.dims.n) if lp.depthwise \
+            else (lp.dims.m, lp.dims.k)
+        x_q = rng.integers(lo_a, hi_a + 1, shape).astype(np.int8)
         out = np.asarray(ex.run_layer(lp.index, x_q))
         checksum += float(np.abs(out).sum())
-        executed += 1
     dt = time.time() - t0
-    what = f"{backend} backend" if not is_bundle else \
-        f"{backend} backend x{prog.n_devices} devices"
-    lines = [f"executed  {executed}/{len(layers)} layers via "
-             f"{what} in {dt:.3f}s (|out| sum {checksum:.6e})"]
-    if skipped:
-        names = ", ".join(skipped[:6]) + (" ..." if len(skipped) > 6 else "")
-        lines.append(f"skipped   {len(skipped)} unsupported depthwise "
-                     f"layer(s): {names}")
-    return "\n".join(lines)
+    return (f"executed  {len(layers)}/{len(layers)} layers via "
+            f"{what} in {dt:.3f}s (|out| sum {checksum:.6e})")
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -283,7 +302,8 @@ def main(argv: list[str] | None = None) -> int:
             bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
             lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k,
             opt_level=args.opt, devices=args.devices,
-            partition=args.partition, link_latency=args.link_latency)
+            partition=args.partition, link_latency=args.link_latency,
+            in_hw=args.in_hw, width=args.width)
     except (KeyError, ValueError, PartitionError) as e:
         msg = e.args[0] if e.args else e
         print(f"error: {msg}", file=sys.stderr)

@@ -334,10 +334,17 @@ def lower_network(name: str, layers: list[GemmLayer],
     Per layer: pick the neuron split (given ``n_luts`` or solved via
     Eq. 12), partition the GEMM along output filters, lower each
     partition on its core, and allocate DDR segments for weights and
-    the activation chain (layer i reads layer i-1's output segment).
-    Layers are chained inter-layer synchronously: each core's fetch
-    stream for layer i>0 opens with a barrier wait matched by a barrier
-    send at the tail of its layer i-1 result stream.
+    the activation chain. Plain GEMM layers read their producer's
+    output segment directly (layer i reads layer i-1's output). Conv
+    layers (a :class:`~repro.compiler.program.ConvGeometry` on the
+    ``GemmLayer``) additionally get an ``L{i}.col`` im2col staging
+    segment — the source spatial tensor (the producer named by
+    ``geometry.src_offset``, falling back to ``act.in`` when it
+    precedes the program) is staged column-matrix-first and the act
+    fetches address the staged copy. Layers are chained inter-layer
+    synchronously: each core's fetch stream for layer i>0 opens with a
+    barrier wait matched by a barrier send at the tail of its layer
+    i-1 result stream.
 
     ``opt_level=0`` returns the canonical schedule; ``opt_level=1``
     additionally runs the ``passes.py`` optimization pipeline (the
@@ -363,14 +370,21 @@ def lower_network(name: str, layers: list[GemmLayer],
                 f"bits_w_lut={w} bits_a={a}")
 
     mem = MemoryMap()
-    in_seg = mem.alloc("act.in", math.ceil(layers[0].dims.m
-                                           * layers[0].dims.k * ba[0] / 8)
-                       if nl else 0)
+    if nl and layers[0].geometry is not None:
+        # conv programs ingest the spatial NHWC tensor, not its im2col
+        geo0 = layers[0].geometry
+        in_bytes = math.ceil(geo0.in_hw * geo0.in_hw * geo0.c_in
+                             * ba[0] / 8)
+    else:
+        in_bytes = math.ceil(layers[0].dims.m * layers[0].dims.k
+                             * ba[0] / 8) if nl else 0
+    in_seg = mem.alloc("act.in", in_bytes)
 
     progs: list[LayerProgram] = []
-    prev_in = in_seg
+    out_segs: list = []
     for i, layer in enumerate(layers):
         g = layer.dims
+        geom = layer.geometry
         if n_luts is not None:
             n_lut = int(min(max(n_luts[i], 0), g.n))
         else:
@@ -382,23 +396,32 @@ def lower_network(name: str, layers: list[GemmLayer],
         wgt_lut = mem.alloc(f"L{i}.wgt.lut",
                             math.ceil(g.k * g_lut.n * bw[i] / 8))
         wgt_dsp = mem.alloc(f"L{i}.wgt.dsp", math.ceil(g.k * g_dsp.n * 4 / 8))
+        if geom is not None:
+            # im2col staging: dense convs stage one [m, k] column
+            # matrix; depthwise layers stage a [m, k] slice per output
+            # channel (no input-channel reuse).
+            cols = g.m * g.k * (g.n if layer.depthwise else 1)
+            act_seg = mem.alloc(f"L{i}.col", math.ceil(cols * ba[i] / 8))
+        else:
+            src = i - 1
+            act_seg = out_segs[src] if src >= 0 else in_seg
         out_seg = mem.alloc(f"L{i}.out", math.ceil(g.m * g.n * ba[i] / 8))
 
         lut_cp = dsp_cp = None
         if g_lut.n > 0:
             lut_cp = lower_lut_layer(
                 g_lut, lut_cfg, dev, bw[i], ba[i], layer.depthwise,
-                LayerAddrs(wgt_lut.base, prev_in.base, out_seg.base))
+                LayerAddrs(wgt_lut.base, act_seg.base, out_seg.base))
         if g_dsp.n > 0:
             dsp_cp = lower_dsp_layer(
                 g_dsp, dsp_cfg, dev, layer.depthwise,
-                LayerAddrs(wgt_dsp.base, prev_in.base, out_seg.base))
+                LayerAddrs(wgt_dsp.base, act_seg.base, out_seg.base))
 
         progs.append(LayerProgram(
             index=i, name=layer.name, dims=g, n_lut=n_lut,
             bits_w_lut=bw[i], bits_a=ba[i], depthwise=layer.depthwise,
-            lut=lut_cp, dsp=dsp_cp))
-        prev_in = out_seg
+            lut=lut_cp, dsp=dsp_cp, geometry=geom))
+        out_segs.append(out_seg)
 
     # Inter-layer barriers (per core, when active on both sides).
     for prev, cur in zip(progs, progs[1:]):

@@ -153,16 +153,27 @@ def lm_gemm_layers(cfg, seq_len: int = 64) -> list[GemmLayer]:
     return _lm_layers(cfg, seq_len)
 
 
-def network_layers(name: str, seq_len: int = 64,
-                   smoke: bool = True) -> list[GemmLayer]:
+def network_layers(name: str, seq_len: int = 64, smoke: bool = True,
+                   in_hw: int | None = None,
+                   width: float | None = None) -> list[GemmLayer]:
     """GEMM layer list for a named network.
 
     ``name`` is a CNN workload (``resnet18``/``mobilenet_v2``) or any
     registered arch id; registry archs use their smoke config unless
-    ``smoke=False``.
+    ``smoke=False``. CNNs accept ``in_hw``/``width`` to compile the
+    geometry-consistent reduced variants of ``models/cnn.py``
+    (``specs_for`` propagates spatial sizes through the layer graph,
+    so the scaled programs still chain end to end).
     """
     if name in WORKLOADS:
-        return [GemmLayer.from_conv(s) for s in WORKLOADS[name]()]
+        if in_hw is not None or width is not None:
+            from repro.models.cnn import CNNConfig, specs_for
+            cfg = CNNConfig(arch=name, in_hw=in_hw or 224,
+                            width=width if width is not None else 1.0)
+            specs = specs_for(cfg)
+        else:
+            specs = WORKLOADS[name]()
+        return [GemmLayer.from_conv(s) for s in specs]
     from repro.configs import registry
     arch = registry.get(name)
     cfg = arch.smoke if (smoke and arch.smoke is not None) else arch.model

@@ -407,9 +407,17 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
         shard_n_luts = []
         for i, gl in enumerate(layers):
             lo, hi = plan.shards[i][d], plan.shards[i][d + 1]
+            geom = gl.geometry
+            if geom is not None:
+                # the device's conv geometry covers only its filter
+                # shard; depthwise shards also consume only their own
+                # channels' input slices (c_in == c_out)
+                geom = dataclasses.replace(
+                    geom, c_out=hi - lo,
+                    c_in=hi - lo if gl.depthwise else geom.c_in)
             shard_layers.append(GemmLayer(
                 gl.name, GemmDims(gl.dims.m, gl.dims.k, hi - lo),
-                gl.depthwise))
+                gl.depthwise, geom))
             # overlap of [lo, hi) with the LUT columns [0, n_lut)
             shard_n_luts.append(max(0, min(hi, splits[i]) - lo))
         progs.append(lower_network(dev_name(d), shard_layers, lut_cfg,

@@ -140,6 +140,57 @@ class MemoryMap:
 
 
 # ---------------------------------------------------------------------------
+# Conv-layer spatial geometry (im2col lowering, §3.2.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """Spatial geometry a conv layer's im2col lowering carries into the
+    program.
+
+    The GEMM view (``GemmDims``) is what the cores execute; the geometry
+    is what the activation staging needs to *build* that view from an
+    NHWC spatial tensor: ``m == out_hw**2``, ``k == c_in * kernel**2``
+    for dense convs and ``k == kernel**2`` per channel for depthwise.
+
+    ``src_offset`` names the layer whose output this layer consumes as
+    its input — this layer's index minus ``src_offset`` (1 for the
+    plain sequential chain, 3 for the ResNet downsample shortcuts that
+    read the block input). A source falling before the program start
+    reads the program input segment (``act.in``). ``pool`` is spatial
+    glue applied to *this* layer's output before the consumer reads it:
+    ``"max"`` (3x3 stride-2 SAME max pool, the ResNet stem) or
+    ``"gap"`` (global average pool before the classifier).
+    """
+    kernel: int
+    stride: int
+    pad: int
+    in_hw: int
+    out_hw: int
+    c_in: int
+    c_out: int
+    src_offset: int = 1
+    pool: str = ""
+
+    def __post_init__(self):
+        if self.pool not in ("", "max", "gap"):
+            raise ValueError(f"unknown pool kind {self.pool!r}")
+        if self.src_offset < 1:
+            raise ValueError("src_offset must be >= 1")
+
+    @property
+    def in_shape(self) -> tuple[int, int, int]:
+        """Spatial NHWC input extents (batch 1): [in_hw, in_hw, c_in]."""
+        return (self.in_hw, self.in_hw, self.c_in)
+
+    def pooled_hw(self) -> int:
+        """Output feature-map size after this layer's ``pool`` glue."""
+        from repro.core.workloads import pooled_hw
+        return pooled_hw(self.out_hw, self.pool)
+
+
+# ---------------------------------------------------------------------------
 # Per-core, per-layer stream bundles
 # ---------------------------------------------------------------------------
 
@@ -202,6 +253,9 @@ class LayerProgram:
     depthwise: bool
     lut: CoreProgram | None      # None when n_lut == 0
     dsp: CoreProgram | None      # None when n_lut == dims.n
+    # Spatial geometry for conv layers (None for plain GEMM/FC layers):
+    # drives the executor's im2col staging and the NHWC chain.
+    geometry: ConvGeometry | None = None
 
     @property
     def n_dsp(self) -> int:
@@ -309,11 +363,24 @@ class Program:
 class GemmLayer:
     """A layer already reduced to GEMM extents (im2col view for convs,
     direct for linears). This is what ``networks.py`` produces for both
-    the CNN workload zoo and the LM registry archs."""
+    the CNN workload zoo and the LM registry archs. Conv layers carry
+    their :class:`ConvGeometry` so the executors can stage im2col
+    activations and chain spatial tensors."""
     name: str
     dims: GemmDims
     depthwise: bool = False
+    geometry: ConvGeometry | None = None
 
     @staticmethod
     def from_conv(spec) -> "GemmLayer":
-        return GemmLayer(spec.name, spec.gemm(), spec.depthwise)
+        """Lower a ``core/workloads.py`` ConvSpec to its GEMM view,
+        keeping the spatial geometry (the downsample shortcuts read the
+        block input, three layers back in the zoo's layer order)."""
+        geom = ConvGeometry(
+            kernel=spec.kernel, stride=spec.stride, pad=spec.kernel // 2,
+            in_hw=spec.in_hw, out_hw=spec.out_hw,
+            c_in=spec.c_out if spec.depthwise else spec.c_in,
+            c_out=spec.c_out,
+            src_offset=3 if spec.shortcut else 1,
+            pool=getattr(spec, "pool", ""))
+        return GemmLayer(spec.name, spec.gemm(), spec.depthwise, geom)

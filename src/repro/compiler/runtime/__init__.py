@@ -19,8 +19,12 @@ from repro.compiler.runtime.base import (
     ExecutionError,
     ExecutorBackend,
     LayerWeights,
-    UnsupportedLayerError,
+    apply_pool,
     bind_synthetic,
+    chain_layers,
+    im2col_patches,
+    requantize,
+    spatialize,
     synthetic_weights,
 )
 from repro.compiler.runtime.golden import GoldenExecutor
@@ -46,6 +50,6 @@ def get_backend(name: str) -> type[ExecutorBackend]:
 __all__ = [
     "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
     "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
-    "UnsupportedLayerError", "bind_synthetic", "get_backend",
-    "synthetic_weights",
+    "apply_pool", "bind_synthetic", "chain_layers", "get_backend",
+    "im2col_patches", "requantize", "spatialize", "synthetic_weights",
 ]

@@ -13,35 +13,77 @@ against real weight codes and dequant scales. Two implementations ship:
     Pallas kernels on TPU).
 
 This module holds everything backends share: weight binding and
-validation, activation checks, layer chaining with inter-layer
-requantization, and the error taxonomy.
+validation, activation checks and im2col staging (conv layers accept
+spatial NHWC tensors and are staged per their
+:class:`~repro.compiler.program.ConvGeometry`; depthwise layers stage
+one im2col slice per output channel), layer chaining with inter-layer
+requantization (FC chains and spatial NHWC conv chains with pooling
+glue and shortcut sources), and the error taxonomy.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import simulate
 from repro.quant.uniform import fit_scale, qrange
-from repro.compiler.program import CORE_NAMES, CoreProgram, LayerProgram, \
-    Program
+from repro.compiler.program import CORE_NAMES, ConvGeometry, CoreProgram, \
+    LayerProgram, Program
 
 
 class ExecutionError(RuntimeError):
     """An instruction stream violated the ISA/program contract."""
 
 
-class UnsupportedLayerError(ExecutionError, NotImplementedError):
-    """The layer is latency-modeled but has no functional executor
-    semantics (today: depthwise convolutions, whose output channels
-    each see a different im2col slice).
+# ---------------------------------------------------------------------------
+# im2col activation staging (§3.2.1)
+# ---------------------------------------------------------------------------
 
-    Subclasses ``NotImplementedError`` so historical callers that
-    caught that keep working; new callers (the CLI's skip-and-report
-    path, batch runners) should catch this type specifically.
+
+def im2col_patches(x_sp: jnp.ndarray, geom: ConvGeometry) -> jnp.ndarray:
+    """Stage a spatial [in_hw, in_hw, C] tensor into im2col patches
+    [m, kernel**2, C] (m = out_hw**2, output positions row-major, taps
+    in (kh, kw) order). Zero padding — code 0 is real 0.0 under the
+    symmetric quantizer.
+
+    Dense convs flatten the last two axes to the [m, k] GEMM activation
+    matrix with k = kernel**2 * C in (kh, kw, c) order — exactly the
+    HWIO weight flattening ``w.reshape(k, n)`` contracts against.
+    Depthwise layers keep the channel axis: slice c is the only input
+    channel output channel c sees.
     """
+    kk, st, p, oh = geom.kernel, geom.stride, geom.pad, geom.out_hw
+    x = jnp.pad(x_sp, ((p, p), (p, p), (0, 0)))
+    span = st * (oh - 1) + 1
+    taps = [x[dh:dh + span:st, dw:dw + span:st, :]
+            for dh in range(kk) for dw in range(kk)]
+    pat = jnp.stack(taps, axis=2)                  # [oh, oh, kk*kk, C]
+    return pat.reshape(oh * oh, kk * kk, x_sp.shape[2])
+
+
+def spatialize(out: jnp.ndarray, geom: ConvGeometry) -> jnp.ndarray:
+    """A layer's [m, n] output as the NHWC [out_hw, out_hw, c_out]
+    spatial tensor the next layer's staging reads (batch 1)."""
+    return jnp.asarray(out).reshape(geom.out_hw, geom.out_hw, geom.c_out)
+
+
+def apply_pool(x_sp: jnp.ndarray, pool: str) -> jnp.ndarray:
+    """Spatial pooling glue between conv layers: ``"max"`` is the
+    ResNet stem's 3x3 stride-2 SAME max pool, ``"gap"`` the global
+    average pool before the classifier. ``""`` is the identity.
+
+    The output spatial extents must agree with the shape rule
+    ``core.workloads.pooled_hw`` (the single source the spec scaling
+    and ``ConvGeometry.pooled_hw`` both delegate to)."""
+    if pool == "max":
+        return jax.lax.reduce_window(x_sp, -jnp.inf, jax.lax.max,
+                                     (3, 3, 1), (2, 2, 1), "SAME")
+    if pool == "gap":
+        return jnp.mean(x_sp, axis=(0, 1), keepdims=True)
+    return x_sp
 
 
 @dataclasses.dataclass
@@ -114,34 +156,64 @@ class ExecutorBackend:
     # -- execution ---------------------------------------------------------
 
     def run_layer(self, index: int, x_q) -> jnp.ndarray:
-        """Execute one layer on int8 activations ``x_q`` [m, k].
+        """Execute one layer on int8 activations.
+
+        ``x_q`` is the pre-staged GEMM activation matrix [m, k] (plain
+        GEMM layers and dense convs), the spatial NHWC tensor
+        [in_hw, in_hw, c_in] for conv layers (staged here per the
+        layer's geometry), or the pre-staged per-channel im2col stack
+        [m, k, n] for depthwise layers.
 
         Returns fp32 [m, n] in split column order (LUT partition first),
-        i.e. exactly ``kernels.ref.hetero_gemm_ref``'s layout.
+        i.e. exactly ``kernels.ref.hetero_gemm_ref``'s layout — which
+        for depthwise layers is the natural channel order (the Eq.-12
+        split assigns the *first* ``n_lut`` filters to the LUT core).
         """
         lp = self.program.layers[index]
-        if lp.depthwise:
-            raise UnsupportedLayerError(
-                f"layer {index} ({lp.name}) is depthwise: no functional "
-                f"executor semantics (each output channel sees a "
-                f"different im2col slice)")
         if index not in self._weights:
             raise ExecutionError(f"layer {index} has no bound weights")
-        x_q = jnp.asarray(x_q, jnp.int8)
-        if x_q.shape != (lp.dims.m, lp.dims.k):
-            raise ExecutionError(
-                f"activations must be [{lp.dims.m},{lp.dims.k}], "
-                f"got {x_q.shape}")
+        x_q = self._staged_activations(lp, jnp.asarray(x_q, jnp.int8))
         wts = self._weights[index]
+
+        def _slice(lo, hi):
+            # depthwise channel c consumes im2col slice c: hand each
+            # partition exactly its channels' slices
+            return x_q[:, :, lo:hi] if lp.depthwise else x_q
 
         outs = []
         if lp.lut is not None:
             self._check_stream(lp, lp.lut)
-            outs.append(self._run_core(lp, lp.lut, x_q, wts.w_lut, wts.s_lut))
+            outs.append(self._run_core(lp, lp.lut, _slice(0, lp.n_lut),
+                                       wts.w_lut, wts.s_lut))
         if lp.dsp is not None:
             self._check_stream(lp, lp.dsp)
-            outs.append(self._run_core(lp, lp.dsp, x_q, wts.w_dsp, wts.s_dsp))
+            outs.append(self._run_core(lp, lp.dsp,
+                                       _slice(lp.n_lut, lp.dims.n),
+                                       wts.w_dsp, wts.s_dsp))
         return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+    def _staged_activations(self, lp: LayerProgram,
+                            x_q: jnp.ndarray) -> jnp.ndarray:
+        """Normalize layer input to the staged im2col form: [m, k] for
+        dense layers, [m, k, n] per-channel slices for depthwise."""
+        m, k, n = lp.dims.m, lp.dims.k, lp.dims.n
+        geom = lp.geometry
+        if geom is not None and x_q.shape == geom.in_shape:
+            pat = im2col_patches(x_q, geom)
+            return pat if lp.depthwise else pat.reshape(m, k)
+        if lp.depthwise:
+            if x_q.shape != (m, k, n):
+                want = (f"{geom.in_shape} spatial or " if geom else "")
+                raise ExecutionError(
+                    f"depthwise layer {lp.index} activations must be "
+                    f"{want}[{m},{k},{n}] staged, got {tuple(x_q.shape)}")
+            return x_q
+        if x_q.shape != (m, k):
+            want = (f"{geom.in_shape} spatial or " if geom else "")
+            raise ExecutionError(
+                f"layer {lp.index} activations must be {want}"
+                f"[{m},{k}], got {tuple(x_q.shape)}")
+        return x_q
 
     def _check_stream(self, lp: LayerProgram, cp: CoreProgram) -> None:
         """Validate the sync-token protocol (when ``check_timing``) by
@@ -156,9 +228,17 @@ class ExecutorBackend:
                 f"deadlock: {e}") from e
 
     def run(self, x_q) -> jnp.ndarray:
-        """Chain all layers (FC-style networks whose GEMMs compose:
-        n_i == k_{i+1}). Activations are requantized to each layer's
-        ``bits_a`` between layers, as the hardware writes them back."""
+        """Chain all layers end to end.
+
+        FC-style networks (GEMMs compose: n_i == k_{i+1}) chain the
+        [m, n] outputs directly; conv programs (every layer carries a
+        geometry) chain spatially — each layer's output is reshaped
+        NHWC, pooled per its ``pool`` glue, requantized to the
+        consumer's ``bits_a`` and staged through im2col, with shortcut
+        layers reading the producer their ``src_offset`` names.
+        ``x_q`` is int8: [m, k] for FC chains, the spatial
+        [in_hw, in_hw, c_in] input image for conv chains.
+        """
         return chain_layers(self.program.layers, self.run_layer, x_q)
 
     # -- backend hook ------------------------------------------------------
@@ -169,16 +249,33 @@ class ExecutorBackend:
         raise NotImplementedError
 
 
+def requantize(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inter-layer write-back requantization: fp32 -> int8 codes at
+    ``bits`` with a per-tensor max-abs scale (the chain's single
+    bit-exactness-critical quantizer)."""
+    s_a = fit_scale(x, bits)
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8)
+
+
 def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
-    """FC-chain ``layers`` through ``run_layer(index, x_q)`` with the
+    """Chain ``layers`` through ``run_layer(index, x_q)`` with the
     inter-layer requantization the hardware applies on write-back.
 
     The single source of truth for the bit-exactness-critical requant
     chain: ``ExecutorBackend.run`` drives it over one program's layers,
     ``MultiDeviceExecutor.run`` over a bundle's global layers — so the
     multi-device hand-off requantizes exactly like the single-device
-    chain. ``layers`` items need ``.index``, ``.dims`` and ``.bits_a``.
+    chain. ``layers`` items need ``.index``, ``.dims``, ``.bits_a``
+    and ``.geometry``; when every layer carries a geometry the chain
+    is spatial (NHWC reshape + pool glue + im2col staging, shortcut
+    layers reading ``src_offset`` producers), otherwise the FC rule
+    n_i == k_{i+1} applies.
     """
+    layers = list(layers)
+    if layers and all(getattr(lp, "geometry", None) is not None
+                      for lp in layers):
+        return _chain_spatial(layers, run_layer, x_q)
     out = None
     for lp in layers:
         if out is not None:
@@ -187,12 +284,48 @@ def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
                     f"layer {lp.index} expects [{lp.dims.m},{lp.dims.k}] "
                     f"activations but layer {lp.index - 1} produced "
                     f"{tuple(out.shape)}; run_layer() drives "
-                    f"non-chaining (conv) programs layer by layer")
-            s_a = fit_scale(out, lp.bits_a)
-            lo, hi = qrange(lp.bits_a)
-            x_q = jnp.clip(jnp.round(out / s_a), lo, hi).astype(jnp.int8)
+                    f"non-chaining programs layer by layer")
+            x_q = requantize(out, lp.bits_a)
         out = run_layer(lp.index, x_q)
     return out
+
+
+def _chain_spatial(layers, run_layer, x_q) -> jnp.ndarray:
+    """Spatial NHWC chain over conv layers (resnet18/mobilenet_v2).
+
+    Layer ``pos`` consumes the output of layer ``pos - src_offset``
+    (the plain chain or a ResNet downsample shortcut reading the block
+    input), spatialized, pooled per the producer's ``pool`` glue and
+    requantized to the consumer's ``bits_a``. The residual adds and
+    activation functions between conv layers are elementwise glue
+    outside the GEMM programs (like softmax/norm in the LM frontends)
+    and are not modeled.
+    """
+    outs: list[jnp.ndarray] = []
+    for pos, lp in enumerate(layers):
+        geom = lp.geometry
+        if pos == 0:
+            x_sp = jnp.asarray(x_q, jnp.int8)
+            if x_sp.shape != geom.in_shape:
+                raise ExecutionError(
+                    f"conv chain input must be spatial "
+                    f"{geom.in_shape}, got {tuple(x_sp.shape)}")
+        else:
+            src = pos - geom.src_offset
+            if src < 0:
+                raise ExecutionError(
+                    f"layer {lp.index} reads producer {src}, which "
+                    f"precedes the chain")
+            src_geom = layers[src].geometry
+            sp = apply_pool(spatialize(outs[src], src_geom),
+                            src_geom.pool)
+            if sp.shape != geom.in_shape:
+                raise ExecutionError(
+                    f"layer {lp.index} expects spatial {geom.in_shape} "
+                    f"but producer {src} yields {tuple(sp.shape)}")
+            x_sp = requantize(sp, lp.bits_a)
+        outs.append(run_layer(lp.index, x_sp))
+    return outs[-1]
 
 
 def synthetic_weights(index: int, k: int, n_lut: int, n_dsp: int,

@@ -11,7 +11,8 @@ The interpreter enforces the ISA contract along the way:
 
   * Fetch instructions must address the layer's DDR segments from the
     program's memory map (weights at ``L{i}.wgt.{core}``, activations
-    at the previous layer's output segment);
+    at the previous layer's output segment — or, for conv layers, at
+    the layer's own ``L{i}.col`` im2col staging segment);
   * every Execute must only consume weight tiles a prior Fetch brought
     on chip, and the tile count must cover the partition exactly;
   * Result instructions place output tiles by their DDR offset and must
@@ -49,7 +50,12 @@ class GoldenExecutor(ExecutorBackend):
     def _segments(self, lp: LayerProgram, core_name: str):
         mem = self.program.memory
         wgt = mem[f"L{lp.index}.wgt.{core_name}"]
-        act = mem["act.in"] if lp.index == 0 else mem[f"L{lp.index - 1}.out"]
+        if lp.geometry is not None:
+            # conv layers fetch the staged im2col copy of their input
+            act = mem[f"L{lp.index}.col"]
+        else:
+            act = mem["act.in"] if lp.index == 0 \
+                else mem[f"L{lp.index - 1}.out"]
         out = mem[f"L{lp.index}.out"]
         return wgt, act, out
 
@@ -136,7 +142,17 @@ class GoldenExecutor(ExecutorBackend):
                     f"{j} before any fetch brought it on chip")
             r0, r1 = ti * tm, min((ti + 1) * tm, m)
             c0, c1 = j * tn, min((j + 1) * tn, g_n)
-            if core_name == "lut":
+            if lp.depthwise:
+                # grouped GEMM: channels c0:c1 each contract their own
+                # im2col slice of the staged [m, k, n_part] stack
+                x_t = x_q[r0:r1, :, c0:c1]
+                if core_name == "lut":
+                    tile = kref.bitserial_grouped_gemm_ref(
+                        x_t, w_codes[:, c0:c1], w_scales[c0:c1], bits)
+                else:
+                    tile = kref.int4_grouped_gemm_ref(
+                        x_t, w_codes[:, c0:c1], w_scales[c0:c1])
+            elif core_name == "lut":
                 tile = kref.bitserial_gemm_ref(
                     x_q[r0:r1], w_codes[:, c0:c1], w_scales[c0:c1], bits)
             else:

@@ -27,6 +27,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core.scheduler import GemmDims
+from repro.compiler.program import ConvGeometry
 from repro.compiler.runtime.base import (
     ExecutorBackend,
     chain_layers,
@@ -48,6 +49,9 @@ class GlobalLayer:
     # col bounds are split-column-order output bounds (filter plans
     # shard them; pipeline plans own the whole [0, n) range).
     placements: tuple[tuple[int, int, int, int], ...]
+    # full-layer spatial geometry for conv layers (filter shards carry
+    # channel-sharded per-device geometries; this is the global one)
+    geometry: ConvGeometry | None = None
 
 
 class MultiDeviceExecutor:
@@ -75,6 +79,7 @@ class MultiDeviceExecutor:
                 lp = self.bundle.devices[d].layers[li]
                 placements = ((d, li, 0, lp.dims.n),)
                 dims, n_lut = lp.dims, lp.n_lut
+                geom = lp.geometry
             else:
                 bounds = plan.shards[gi]
                 placements = tuple((d, li, bounds[d], bounds[d + 1])
@@ -84,10 +89,19 @@ class MultiDeviceExecutor:
                 n_lut = sum(self.bundle.devices[d].layers[li].n_lut
                             for d, li in owners)
                 lp = first
+                # un-shard the conv geometry: device programs carry the
+                # local filter shard's channel counts
+                geom = lp.geometry
+                if geom is not None:
+                    n = bounds[-1]
+                    geom = dataclasses.replace(
+                        geom, c_out=n,
+                        c_in=n if lp.depthwise else geom.c_in)
             out.append(GlobalLayer(
                 index=gi, name=lp.name, dims=dims, n_lut=n_lut,
                 bits_w_lut=lp.bits_w_lut, bits_a=lp.bits_a,
-                depthwise=lp.depthwise, placements=placements))
+                depthwise=lp.depthwise, placements=placements,
+                geometry=geom))
         return out
 
     # -- weight binding ------------------------------------------------------
@@ -140,20 +154,35 @@ class MultiDeviceExecutor:
     # -- execution -----------------------------------------------------------
 
     def run_layer(self, index: int, x_q) -> jnp.ndarray:
-        """Execute one global layer on full activations ``x_q`` [m, k].
+        """Execute one global layer on full activations: the staged
+        [m, k] GEMM matrix, the spatial [in_hw, in_hw, c_in] tensor for
+        conv layers, or the staged [m, k, n] stack for depthwise.
 
         Returns the *full* fp32 [m, n] output in single-device split
         column order: shards concatenate in device order (filter), or
         the owning stage computes the whole layer (pipeline).
         """
         gl = self.layers[index]
-        outs = [self.executors[d].run_layer(li, x_q)
-                for d, li, lo, hi in gl.placements if hi > lo]
+        x_q = jnp.asarray(x_q, jnp.int8)
+        outs = []
+        for d, li, lo, hi in gl.placements:
+            if hi <= lo:
+                continue
+            x_d = x_q
+            if gl.depthwise and hi - lo != gl.dims.n:
+                # a filter shard of a depthwise layer only consumes its
+                # own channels' input slices — split column order is the
+                # natural channel order for depthwise (LUT columns are
+                # the first n_lut channels), so channel bounds slice
+                # both the spatial [h, w, C] and staged [m, k, N] forms
+                x_d = x_q[..., lo:hi]
+            outs.append(self.executors[d].run_layer(li, x_d))
         return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
     def run(self, x_q) -> jnp.ndarray:
-        """Chain all global layers (FC-style networks), through the
-        same ``chain_layers`` requantization as ``ExecutorBackend.run``
-        — the cross-device hand-off (pipeline boundary or filter
-        gather) carries exactly what the single-device chain would."""
+        """Chain all global layers through the same ``chain_layers``
+        requantization (and, for conv programs, spatial NHWC staging)
+        as ``ExecutorBackend.run`` — the cross-device hand-off
+        (pipeline boundary or filter gather) carries exactly what the
+        single-device chain would."""
         return chain_layers(self.layers, self.run_layer, x_q)

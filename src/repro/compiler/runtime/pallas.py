@@ -62,6 +62,20 @@ def _make_dsp_fn(mode: str):
     return jax.jit(f)
 
 
+def _make_lut_dw_fn(bits: int, mode: str):
+    def f(x_col, w_codes, w_scales):
+        return kops.bitserial_grouped_matmul(x_col, w_codes, w_scales,
+                                             bits, mode=mode)
+    return jax.jit(f)
+
+
+def _make_dsp_dw_fn(mode: str):
+    def f(x_col, w_codes, w_scales):
+        return kops.int4_grouped_matmul(x_col, w_codes, w_scales,
+                                        mode=mode)
+    return jax.jit(f)
+
+
 class PallasExecutor(ExecutorBackend):
     """One batched (jitted, program-cached) kernel call per partition."""
 
@@ -115,14 +129,20 @@ class PallasExecutor(ExecutorBackend):
 
     def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
                   w_codes, w_scales) -> jnp.ndarray:
+        # depthwise partitions batch the whole grouped (per-channel
+        # im2col) contraction in one call, like dense partitions batch
+        # their tile grid into one GEMM
+        dw = lp.depthwise
         if cp.core == isa.CoreSel.LUT:
-            key = ("lut", lp.bits_w_lut)
+            key = ("lut-dw" if dw else "lut", lp.bits_w_lut)
             fn = self._fns.get(key)
             if fn is None:
-                fn = self._fns[key] = _make_lut_fn(lp.bits_w_lut, self.mode)
+                make = _make_lut_dw_fn if dw else _make_lut_fn
+                fn = self._fns[key] = make(lp.bits_w_lut, self.mode)
         else:
-            key = ("dsp", 4)
+            key = ("dsp-dw" if dw else "dsp", 4)
             fn = self._fns.get(key)
             if fn is None:
-                fn = self._fns[key] = _make_dsp_fn(self.mode)
+                make = _make_dsp_dw_fn if dw else _make_dsp_fn
+                fn = self._fns[key] = make(self.mode)
         return fn(x_q, w_codes, w_scales)

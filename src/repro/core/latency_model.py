@@ -17,14 +17,12 @@ Network latency is inter-layer synchronous (Eq. 10):
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
 from repro.core.scheduler import (
     DspCoreConfig,
     FPGADevice,
-    GemmDims,
     LutCoreConfig,
     simulate_dsp_core,
     simulate_lut_core,

@@ -22,8 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
-
 from repro.core import isa
 
 # ---------------------------------------------------------------------------

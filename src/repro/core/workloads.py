@@ -19,9 +19,21 @@ architectures (used by the TPU-side cost model).
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.core.scheduler import GemmDims
+
+
+def pooled_hw(out_hw: int, pool: str) -> int:
+    """Feature-map size after a layer's pooling glue — the single
+    shape rule shared by ``ConvSpec``, the compiler's ``ConvGeometry``
+    and the executors' ``apply_pool`` data transform. ``"max"`` is the
+    ResNet stem's 3x3 stride-2 SAME max pool; ``"gap"`` the global
+    average pool; ``""`` the identity."""
+    if pool == "max":
+        return (out_hw + 1) // 2
+    if pool == "gap":
+        return 1
+    return out_hw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +49,10 @@ class ConvSpec:
     is_first: bool = False
     is_last: bool = False
     shortcut: bool = False      # 1x1 downsample projection (ResNet)
+    # Spatial glue applied to this layer's *output* before the next
+    # layer reads it: "" (none), "max" (3x3 stride-2 SAME max pool, the
+    # ResNet stem) or "gap" (global average pool before the classifier).
+    pool: str = ""
 
     @property
     def out_hw(self) -> int:
@@ -44,6 +60,11 @@ class ConvSpec:
             return 1
         pad = self.kernel // 2
         return (self.in_hw + 2 * pad - self.kernel) // self.stride + 1
+
+    @property
+    def pooled_out_hw(self) -> int:
+        """Feature-map size the *next* layer reads (after ``pool``)."""
+        return pooled_hw(self.out_hw, self.pool)
 
     def gemm(self) -> GemmDims:
         m = self.out_hw * self.out_hw
@@ -68,7 +89,7 @@ def resnet18_specs() -> list[ConvSpec]:
     """ResNet-18 @224. Layer indices match the paper's Fig. 9/10 numbering
     (downsample projections land at layers 8, 13, 18)."""
     specs: list[ConvSpec] = [
-        ConvSpec("conv1", 3, 64, 7, 2, 224, is_first=True),
+        ConvSpec("conv1", 3, 64, 7, 2, 224, is_first=True, pool="max"),
     ]
 
     def block(idx, c_in, c_out, stride, hw):
@@ -93,7 +114,8 @@ def resnet18_specs() -> list[ConvSpec]:
     specs += block(16, 256, 512, 2, 14)
     specs.append(ConvSpec("conv18_ds", 256, 512, 1, 2, 14, shortcut=True))
     specs += block(19, 512, 512, 1, 7)
-    # classifier as 1x1 "conv" on a 1x1 map
+    # global average pool feeds the classifier, a 1x1 "conv" on a 1x1 map
+    specs[-1] = dataclasses.replace(specs[-1], pool="gap")
     specs.append(ConvSpec("fc", 512, 1000, 1, 1, 1, is_last=True))
     return specs
 
@@ -129,7 +151,7 @@ def mobilenet_v2_specs() -> list[ConvSpec]:
             c_in = c
             bi += 1
 
-    specs.append(ConvSpec("conv_last", 320, 1280, 1, 1, hw))
+    specs.append(ConvSpec("conv_last", 320, 1280, 1, 1, hw, pool="gap"))
     specs.append(ConvSpec("fc", 1280, 1000, 1, 1, 1, is_last=True))
     return specs
 

@@ -14,7 +14,6 @@ serving examples run on deterministic synthetic data:
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,6 @@ episode lengths are tens of steps).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -23,7 +23,6 @@ budget (Eqs. 3-5) — shrink M, N, then buffer depths, until it fits.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import numpy as np
@@ -37,7 +36,7 @@ from repro.core.scheduler import (
 )
 from repro.core.split import solve_split
 from repro.core.workloads import ConvSpec
-from repro.core.tpu_cost import TPUChip, V5E, hetero_gemm_cost
+from repro.core.tpu_cost import TPUChip, V5E
 
 
 # ---------------------------------------------------------------------------

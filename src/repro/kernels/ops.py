@@ -12,8 +12,6 @@ These wrappers are the only entry points the model zoo uses.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -80,6 +78,29 @@ def int4_matmul(x_q: jax.Array, w_q: jax.Array, w_scale: jax.Array, *,
     out = _int4_kernel(xp, wp, sp, bm=bm, bn=bn, bk=bk,
                        interpret=not _on_tpu())
     return out[:m, :n]
+
+
+def bitserial_grouped_matmul(x_col: jax.Array, w_q: jax.Array,
+                             w_scale: jax.Array, bits: int, *,
+                             mode: str = "auto") -> jax.Array:
+    """Depthwise (grouped) bitplane GEMM: each output channel contracts
+    only its own [M, K] im2col slice of ``x_col`` [M, K, N].
+
+    No dedicated Pallas kernel: the per-channel contraction is K=kh*kw
+    taps, far below the MXU tile, so the vectorized jnp path (an exact
+    int32 ``einsum``) is the kernel on every backend. ``mode`` is
+    accepted for interface symmetry with :func:`bitserial_matmul`.
+    """
+    del mode
+    return ref.bitserial_grouped_gemm_ref(x_col, w_q, w_scale, bits)
+
+
+def int4_grouped_matmul(x_col: jax.Array, w_q: jax.Array,
+                        w_scale: jax.Array, *, mode: str = "auto"
+                        ) -> jax.Array:
+    """Depthwise (grouped) int4 GEMM over per-channel im2col slices."""
+    del mode
+    return ref.int4_grouped_gemm_ref(x_col, w_q, w_scale)
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -89,6 +89,39 @@ def bitserial_gemm_ref(x: jax.Array, w_q: jax.Array, w_scale: jax.Array,
     return acc.astype(jnp.float32) * w_scale[None, :]
 
 
+def bitserial_grouped_gemm_ref(x_col: jax.Array, w_q: jax.Array,
+                               w_scale: jax.Array, bits: int) -> jax.Array:
+    """Grouped (depthwise) bitplane GEMM oracle.
+
+    x_col: [M, K, N] int8 — one im2col slice per output channel (K is
+    the kh*kw tap count; channel c only sees its own slice).
+    w_q: [K, N] signed codes within ``bits`` bits; w_scale: [N] fp32.
+    Returns fp32 [M, N] with out[m, c] = (sum_k x_col[m,k,c] *
+    w_q[k,c]) * w_scale[c], accumulated exactly in int32 through the
+    bitplane decomposition (same numerics as the dense oracle).
+    """
+    planes = bitplane_decompose(w_q, bits)                # [B, K, N]
+    s = plane_scales(bits)
+    acc = jnp.zeros((x_col.shape[0], w_q.shape[1]), jnp.int32)
+    xc = x_col.astype(jnp.int32)
+    for b in range(bits):
+        part = jnp.einsum("mkc,kc->mc", xc, planes[b].astype(jnp.int32))
+        acc = acc + s[b] * part
+    return acc.astype(jnp.float32) * w_scale[None, :]
+
+
+def int4_grouped_gemm_ref(x_col: jax.Array, w_q: jax.Array,
+                          w_scale: jax.Array) -> jax.Array:
+    """Grouped (depthwise) int4 GEMM oracle.
+
+    x_col: [M, K, N] int8 per-channel im2col slices; w_q: [K, N] int32
+    codes in [-8, 7]; w_scale: [N] fp32. Exact int32 accumulation.
+    """
+    acc = jnp.einsum("mkc,kc->mc", x_col.astype(jnp.int32),
+                     jnp.asarray(w_q, jnp.int32))
+    return acc.astype(jnp.float32) * w_scale[None, :]
+
+
 def int4_gemm_ref(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array
                   ) -> jax.Array:
     """Packed-int4 GEMM oracle.

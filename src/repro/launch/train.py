@@ -15,7 +15,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager, StepWatchdog
 from repro.configs import registry

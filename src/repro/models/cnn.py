@@ -52,22 +52,32 @@ def _scale_c(c: int, width: float) -> int:
 
 
 def specs_for(cfg: CNNConfig) -> list[ConvSpec]:
-    """ConvSpec list matching this config (width/input-size scaled)."""
+    """ConvSpec list matching this config (width/input-size scaled).
+
+    Spatial sizes are *propagated* through the layer graph — each
+    layer's ``in_hw`` is its producer's (pooled) ``out_hw``, with the
+    downsample shortcuts reading the block input three layers back —
+    so the scaled specs chain exactly like the full-size network and
+    the compiled program's im2col geometry stays executable at any
+    input size.
+    """
     base = resnet18_specs() if cfg.arch == "resnet18" else mobilenet_v2_specs()
     if cfg.width >= 1.0 and cfg.in_hw == 224 and cfg.n_classes == 1000:
         return base
-    ratio = cfg.in_hw / 224.0
-    out = []
-    for s in base:
+    out: list[ConvSpec] = []
+    for i, s in enumerate(base):
         c_in = 3 if s.is_first else _scale_c(s.c_in, cfg.width)
         c_out = (cfg.n_classes if s.is_last
                  else _scale_c(s.c_out, cfg.width))
         if s.depthwise:
             c_in = c_out = _scale_c(s.c_out, cfg.width)
-        in_hw = 1 if s.in_hw == 1 else max(4, int(round(s.in_hw * ratio)))
+        if s.is_first:
+            in_hw = cfg.in_hw
+        else:
+            src = out[i - (3 if s.shortcut else 1)]
+            in_hw = src.pooled_out_hw
         out.append(dataclasses.replace(s, c_in=c_in, c_out=c_out,
                                        in_hw=in_hw))
-    # fix up chained dims (c_in of layer i+1 = c_out of producer)
     return out
 
 
@@ -109,6 +119,20 @@ def _quant_activations(x: jax.Array, bits: int) -> jax.Array:
     return x + jax.lax.stop_gradient(xq - x)            # STE
 
 
+def conv2d(x: jax.Array, w: jax.Array, s: ConvSpec) -> jax.Array:
+    """The network's raw conv primitive: NHWC x HWIO, ``kernel // 2``
+    padding, grouped for depthwise. Also the reference numerics the
+    compiler executors' im2col staging is validated against
+    (``tests/test_conv_exec.py``)."""
+    pad = s.kernel // 2
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(s.stride, s.stride),
+        padding=[(pad, pad), (pad, pad)], dimension_numbers=dn,
+        feature_group_count=s.c_out if s.depthwise else 1)
+
+
 def conv_layer(p: dict, x: jax.Array, s: ConvSpec,
                q: LayerQuantConfig | None, relu: bool = True) -> jax.Array:
     """NHWC conv + folded norm + optional relu, with hybrid quant."""
@@ -124,13 +148,7 @@ def conv_layer(p: dict, x: jax.Array, s: ConvSpec,
             w_f = jnp.moveaxis(w, 3, 0)
             w_f = hybrid_fake_quant_weight(w_f, q)
             w = jnp.moveaxis(w_f, 0, 3)
-    pad = s.kernel // 2
-    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
-                                        ("NHWC", "HWIO", "NHWC"))
-    out = jax.lax.conv_general_dilated(
-        x, w, window_strides=(s.stride, s.stride),
-        padding=[(pad, pad), (pad, pad)], dimension_numbers=dn,
-        feature_group_count=s.c_out if s.depthwise else 1)
+    out = conv2d(x, w, s)
     # BN-style per-channel RMS normalization (mean-free): stabilizes
     # from-scratch QAT; folds into the requantization scale at inference
     # exactly like BN does on the accelerator.

@@ -19,7 +19,6 @@ activations (use remat around ``body`` for long pipelines).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -22,13 +22,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.quant.uniform import (
     dequantize,
     fake_quant_per_channel,
     fit_scale_per_channel,
-    qrange,
     quantize,
 )
 

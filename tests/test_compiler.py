@@ -197,12 +197,17 @@ def test_golden_executor_validates_contract():
                       w_dsp=rng.integers(-8, 8, (32, 22)), s_dsp=np.ones(22))
 
 
-def test_depthwise_not_executable():
+def test_depthwise_executes_grouped():
+    from repro.compiler import bind_synthetic
     prog = lower_network(
         "dw", [GemmLayer("dw", GemmDims(64, 9, 32), depthwise=True)],
         LUT, DSP, XC7Z020, n_luts=[16])
-    with pytest.raises(NotImplementedError):
-        GoldenExecutor(prog).run_layer(0, jnp.zeros((64, 9), jnp.int8))
+    ex = GoldenExecutor(prog)
+    bind_synthetic(ex, prog.layers[0])
+    x = np.random.default_rng(0).integers(-8, 8, (64, 9, 32)).astype(np.int8)
+    out = np.asarray(ex.run_layer(0, x))
+    assert out.shape == (64, 32)
+    assert np.isfinite(out).all()
 
 
 # ---------------------------------------------------------------------------

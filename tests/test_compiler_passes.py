@@ -11,8 +11,8 @@ The contract under test (ISSUE 2 acceptance surface):
   * -O1 strictly reduces simulated total latency on registry networks
     while reducing the instruction count;
   * each pass preserves the sync-token protocol (PassPipeline
-    validation) and depthwise layers fail with the dedicated
-    UnsupportedLayerError (skip-and-report in the CLI).
+    validation) and depthwise layers execute functionally on both
+    backends (grouped per-channel GEMMs on staged im2col slices).
 """
 import numpy as np
 import pytest
@@ -25,7 +25,6 @@ from repro.compiler import (
     PassError,
     PassPipeline,
     SyncElisionPass,
-    UnsupportedLayerError,
     WeightPrefetchPass,
     assemble,
     bind_synthetic,
@@ -257,35 +256,54 @@ def test_opt_level_threaded_through_lower_and_cli_entry():
 
 
 # ---------------------------------------------------------------------------
-# Depthwise: dedicated error + CLI skip-and-report
+# Depthwise: grouped execution on both backends + CLI execute
 # ---------------------------------------------------------------------------
 
 
-def _dw_program():
+def _dw_program(opt_level=0):
     return lower_network(
         "dwnet",
         [GemmLayer("fc0", GemmDims(64, 9, 32)),
          GemmLayer("dw", GemmDims(64, 9, 32), depthwise=True)],
-        LUT, DSP, XC7Z020, n_luts=[16, 16])
+        LUT, DSP, XC7Z020, n_luts=[16, 16], opt_level=opt_level)
 
 
-def test_depthwise_raises_dedicated_error_on_both_backends():
+def test_depthwise_executes_bit_exact_on_both_backends():
+    # a geometry-less depthwise layer takes the pre-staged per-channel
+    # im2col stack [m, k, n]; LUT and DSP partitions each consume their
+    # own channels' slices and concatenate in natural channel order
     prog = _dw_program()
-    x = np.zeros((64, 9), np.int8)
-    for backend in (GoldenExecutor, PallasExecutor):
-        with pytest.raises(UnsupportedLayerError):
-            backend(prog).run_layer(1, x)
-    # back-compat: callers catching NotImplementedError still work
-    with pytest.raises(NotImplementedError):
-        GoldenExecutor(prog).run_layer(1, x)
+    golden, pallas = GoldenExecutor(prog), PallasExecutor(prog)
+    lp = prog.layers[1]
+    bind_synthetic(golden, lp)
+    bind_synthetic(pallas, lp)
+    x = np.random.default_rng(3).integers(
+        -8, 8, (64, 9, 32)).astype(np.int8)
+    out_g = np.asarray(golden.run_layer(1, x))
+    assert out_g.shape == (64, 32)
+    assert (out_g == np.asarray(pallas.run_layer(1, x))).all()
+    # grouped semantics: channel c only sees slice c
+    w_lut, s_lut = golden._weights[1].w_lut, golden._weights[1].s_lut
+    want0 = (x[:, :, 0].astype(np.int64)
+             @ np.asarray(w_lut)[:, 0].astype(np.int64))
+    want0 = want0.astype(np.float32) * np.float32(np.asarray(s_lut)[0])
+    assert (out_g[:, 0] == want0).all()
+
+
+def test_depthwise_rejects_wrong_activation_shape():
+    from repro.compiler.runtime import ExecutionError
+    prog = _dw_program()
+    ex = GoldenExecutor(prog)
+    bind_synthetic(ex, prog.layers[1])
+    with pytest.raises(ExecutionError, match="staged"):
+        ex.run_layer(1, np.zeros((64, 9), np.int8))
 
 
 @pytest.mark.parametrize("backend", ["golden", "pallas"])
-def test_execute_report_skips_depthwise(backend):
+def test_execute_report_covers_depthwise(backend):
     report = execute_report(_dw_program(), backend=backend)
-    assert "executed  1/2 layers" in report
-    assert "skipped   1 unsupported depthwise" in report
-    assert "dw" in report
+    assert "executed  2/2 layers" in report
+    assert "skipped" not in report
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,4 @@
 """Dry-run machinery unit tests (no 512-device mesh needed)."""
-import jax.numpy as jnp
 import pytest
 
 from repro import configs

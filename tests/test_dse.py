@@ -1,13 +1,11 @@
 """DSE: environment mechanics, discretization, reward, agent learning."""
 import numpy as np
-import pytest
 
 from repro.core.cost_model import system_cost
 from repro.core.scheduler import XC7Z020
 from repro.core.workloads import resnet18_specs
 from repro.dse.ddpg import DDPGAgent, DDPGConfig
 from repro.dse.env import (
-    RANGES,
     STATE_DIM,
     AccuracyProxy,
     N3HEnv,

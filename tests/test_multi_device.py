@@ -413,7 +413,7 @@ def test_cli_bundle_bin_round_trip(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# Satellites: executor JIT cache, serving program LRU, shim deprecation
+# Satellites: executor JIT cache, serving program LRU, shim removal
 # ---------------------------------------------------------------------------
 
 
@@ -464,7 +464,11 @@ def test_serving_program_cache_evicts():
                             "maxsize": 1}
 
 
-def test_executor_shim_warns_deprecation():
+def test_executor_shim_removed():
+    # the deprecated repro.compiler.executor shim is gone; the runtime
+    # names live in repro.compiler.runtime (re-exported at package top)
     sys.modules.pop("repro.compiler.executor", None)
-    with pytest.warns(DeprecationWarning, match="compiler.runtime"):
+    with pytest.raises(ModuleNotFoundError):
         importlib.import_module("repro.compiler.executor")
+    from repro.compiler.runtime import GoldenExecutor as G
+    assert G is GoldenExecutor

@@ -5,8 +5,6 @@ devices (the same mechanism as the dry-run)."""
 import subprocess
 import sys
 
-import pytest
-
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

@@ -1,12 +1,10 @@
 """Sharding-rule invariants (no multi-device mesh needed: 1x1)."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.sharding import (
     DEFAULT_RULES,
-    AxisRules,
     logical_to_spec,
     zero1_spec,
 )

@@ -1,10 +1,7 @@
 """End-to-end system tests: train loop + resume + serve (integration)."""
 import dataclasses
-import subprocess
-import sys
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro import configs

@@ -1,5 +1,4 @@
 """Optimizer, gradient compression, checkpointing, watchdog, serving."""
-import os
 import time
 
 import jax
