@@ -235,6 +235,23 @@ def bench_multi_device(seq_len: int = 64,
             json.dumps(bench, sort_keys=True))
 
 
+def bench_dse_sim_gap(smoke: bool = False) -> list[tuple[str, float, str]]:
+    """``dse.sim_gap.*`` rows: the analytical latency model the DSE
+    explores with vs ``simulate_program`` on the compiled ``-O1``
+    program, for the registry LMs this bench already tracks — the gap
+    the two-tier search loop (docs/dse.md) corrects inside the loop,
+    with the documented tolerance flagged per row."""
+    from repro.dse.evaluator import sim_gap_report
+    nets = ["llama3.2-1b"] if smoke else ["llama3.2-1b", "mamba2-780m"]
+    rows = []
+    for net in nets:
+        t0 = time.time()
+        rep = sim_gap_report(net, seq_len=16 if smoke else 64)
+        rows.append((f"dse.sim_gap.{net}", 1e6 * (time.time() - t0),
+                     json.dumps(rep, sort_keys=True)))
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = [bench_network(name, kw)
             for name, kw in (SMOKE_NETWORKS if smoke else NETWORKS)]
@@ -242,6 +259,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     for arch in ("resnet18", "mobilenet_v2"):
         rows.append(bench_cnn_execute(arch, smoke=smoke))
     rows.append(bench_multi_device(seq_len=16 if smoke else 64))
+    rows.extend(bench_dse_sim_gap(smoke=smoke))
     return rows
 
 

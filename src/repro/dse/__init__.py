@@ -1,14 +1,36 @@
 """Design-space exploration: the paper's DDPG-based co-design framework.
 
-  ddpg    — actor/critic/targets/replay/exploration noise, pure JAX
-  env     — the §5 environment: 6 hardware actions + 2N quantization
-            actions, Eq. 17 state, Eq. 13/14 discretization, Eq. 18 reward
-  search  — end-to-end search driver (paper Table 3 reproduction) with
-            both the FPGA cost model and the TPU-adapted cost model
+  ddpg      — actor/critic/targets/replay/exploration noise, pure JAX
+  env       — the §5 environment: 6 hardware actions + 2N quantization
+              actions, Eq. 17 state, Eq. 13/14 discretization, Eq. 18
+              reward (``shaped_reward``, shared by every scorer)
+  evaluator — simulator-in-the-loop tier: elite configs compiled
+              through the NN→ISA toolchain and re-scored on
+              ``simulate_program`` (LRU program cache, EliteSet
+              re-ranking, the ``dse.sim_gap.*`` bench payloads)
+  search    — end-to-end two-tier search driver (paper Table 3
+              reproduction + the calibration report of docs/dse.md)
 """
 from repro.dse.ddpg import DDPGAgent, DDPGConfig
-from repro.dse.env import AccuracyProxy, N3HEnv, N3HEnvConfig
+from repro.dse.env import (
+    AccuracyProxy,
+    N3HEnv,
+    N3HEnvConfig,
+    evaluate_config,
+    shaped_reward,
+)
+from repro.dse.evaluator import (
+    SIM_GAP_TOL_PCT,
+    EliteSet,
+    EvalResult,
+    ProgramEvaluator,
+    gemm_specs,
+    sim_gap_report,
+)
 from repro.dse.search import SearchResult, run_search
 
 __all__ = ["DDPGAgent", "DDPGConfig", "AccuracyProxy", "N3HEnv",
-           "N3HEnvConfig", "SearchResult", "run_search"]
+           "N3HEnvConfig", "evaluate_config", "shaped_reward",
+           "SIM_GAP_TOL_PCT", "EliteSet", "EvalResult",
+           "ProgramEvaluator", "gemm_specs", "sim_gap_report",
+           "SearchResult", "run_search"]

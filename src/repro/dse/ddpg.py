@@ -160,6 +160,17 @@ class DDPGAgent:
     def remember(self, s, a, r, s2, done):
         self.buffer.add(s, a, r, s2, done)
 
+    def remember_episode(self, transitions, reward: float):
+        """Store a whole episode under one terminal reward (the paper's
+        episode-level sparse reward assignment): every transition gets
+        ``reward``. Also the elite-correction hook of the two-tier DSE
+        loop — when the simulator re-scores an elite config, its episode
+        is re-injected with the corrected reward, so the critic learns
+        from the compiled program's latency, not just the closed form.
+        """
+        for (s, a, _r, s2, done) in transitions:
+            self.buffer.add(s, a, reward, s2, done)
+
     def learn(self, n_updates: int = 1):
         if self.buffer.n < self.cfg.batch_size:
             return

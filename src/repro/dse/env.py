@@ -77,6 +77,24 @@ class AccuracyProxy:
 
 
 # ---------------------------------------------------------------------------
+# Reward shaping (Eq. 18) — shared by both environments and the
+# simulator-in-the-loop elite re-scoring (dse/evaluator.py)
+# ---------------------------------------------------------------------------
+
+
+def shaped_reward(latency_ms: float, target_latency_ms: float, acc: float,
+                  baseline_acc: float, reward_lambda: float) -> float:
+    """Eq. 18: latency-infeasible configs score ``<= -1`` proportionally
+    to the violation; feasible configs score the accuracy delta scaled
+    by lambda. One definition, three consumers: ``N3HEnv``,
+    ``TpuHeteroEnv`` and ``ProgramEvaluator`` (which re-applies it with
+    the *simulated* latency of the compiled program)."""
+    if latency_ms > target_latency_ms:
+        return (target_latency_ms - latency_ms) / target_latency_ms - 1.0
+    return (acc - baseline_acc) * reward_lambda
+
+
+# ---------------------------------------------------------------------------
 # Design-factor ranges (Table 2)
 # ---------------------------------------------------------------------------
 
@@ -246,30 +264,54 @@ class N3HEnv:
             if s.is_first or s.is_last:
                 bw[i] = 8
                 ba[i] = 8
-        cycles = 0.0
-        ratios = []
-        for spec, bwi, bai in zip(self.specs, bw, ba):
-            sol = solve_split(spec, lut_cfg, dsp_cfg, cfg.device, bwi, bai)
-            ratios.append(sol.ratio)
-            cycles += sol.cycles
-        latency_ms = cfg.device.cycles_to_ms(cycles)
-        acc = cfg.proxy.evaluate(self.specs, bw, ba, ratios)
+        return evaluate_config(self.specs, lut_cfg, dsp_cfg, cfg.device,
+                               bw, ba, cfg.proxy, cfg.target_latency_ms,
+                               cfg.reward_lambda)
 
-        if latency_ms > cfg.target_latency_ms:
-            reward = (cfg.target_latency_ms - latency_ms) \
-                / cfg.target_latency_ms - 1.0
-        else:
-            reward = (acc - cfg.proxy.baseline_acc) * cfg.reward_lambda
-        info = {
-            "latency_ms": latency_ms,
-            "acc": acc,
-            "lut_cfg": lut_cfg,
-            "dsp_cfg": dsp_cfg,
-            "bw_lut": bw,
-            "ba": ba,
-            "ratios": ratios,
-        }
-        return float(reward), info
+
+def evaluate_config(specs: Sequence[ConvSpec], lut_cfg: LutCoreConfig,
+                    dsp_cfg: DspCoreConfig, device: FPGADevice,
+                    bw: Sequence[int], ba: Sequence[int],
+                    proxy: AccuracyProxy, target_latency_ms: float,
+                    reward_lambda: float) -> tuple[float, dict]:
+    """Analytical (closed-form) scoring of one *complete* configuration.
+
+    The terminal-evaluation half of :class:`N3HEnv` factored out so the
+    benchmarks and the simulator-in-the-loop evaluator
+    (``dse/evaluator.py``) can score a hand-built config without
+    driving an episode. The returned ``info`` dict is the full config
+    artifact the compiler needs to reproduce the design point:
+    core knobs (``lut_cfg``/``dsp_cfg``), per-layer bit-widths
+    (``bw_lut``/``ba``) and the exact Eq.-12 neuron splits
+    (``n_luts``, with ``ratios`` as the derived fractions).
+    ``reward_source`` tags which latency model priced the reward —
+    ``"analytical"`` here; ``ProgramEvaluator`` re-tags corrected
+    copies as ``"simulated"``.
+    """
+    cycles = 0.0
+    ratios: list[float] = []
+    n_luts: list[int] = []
+    for spec, bwi, bai in zip(specs, bw, ba):
+        sol = solve_split(spec, lut_cfg, dsp_cfg, device, bwi, bai)
+        ratios.append(sol.ratio)
+        n_luts.append(sol.n_lut)
+        cycles += sol.cycles
+    latency_ms = device.cycles_to_ms(cycles)
+    acc = proxy.evaluate(specs, bw, ba, ratios)
+    reward = shaped_reward(latency_ms, target_latency_ms, acc,
+                           proxy.baseline_acc, reward_lambda)
+    info = {
+        "latency_ms": latency_ms,
+        "acc": acc,
+        "lut_cfg": lut_cfg,
+        "dsp_cfg": dsp_cfg,
+        "bw_lut": list(bw),
+        "ba": list(ba),
+        "ratios": ratios,
+        "n_luts": n_luts,
+        "reward_source": "analytical",
+    }
+    return float(reward), info
 
 
 # ---------------------------------------------------------------------------
@@ -287,12 +329,13 @@ class TpuHeteroEnv:
     def __init__(self, gemms: Sequence[tuple[int, int, int]],
                  target_latency_ms: float, chip: TPUChip = V5E,
                  proxy: AccuracyProxy = AccuracyProxy(),
-                 spatial: bool = False):
+                 spatial: bool = False, reward_lambda: float = 0.01):
         self.gemms = list(gemms)          # (m_tokens, k, n) per layer
         self.chip = chip
         self.target = target_latency_ms
         self.proxy = proxy
         self.spatial = spatial
+        self.reward_lambda = reward_lambda
         self.n_layers = len(self.gemms)
         self.episode_len = 2 * self.n_layers
         self.reset()
@@ -342,10 +385,9 @@ class TpuHeteroEnv:
         specs_like = [ConvSpec(f"g{i}", k, n, 1, 1, 1)
                       for i, (m, k, n) in enumerate(self.gemms)]
         acc = self.proxy.evaluate(specs_like, self.bw, self.ba, ratios)
-        if latency_ms > self.target:
-            reward = (self.target - latency_ms) / self.target - 1.0
-        else:
-            reward = (acc - self.proxy.baseline_acc) * 0.01
+        reward = shaped_reward(latency_ms, self.target, acc,
+                               self.proxy.baseline_acc, self.reward_lambda)
         info = {"latency_ms": latency_ms, "acc": acc, "bw": self.bw,
-                "ba": self.ba, "ratios": ratios}
+                "ba": self.ba, "ratios": ratios,
+                "reward_source": "analytical"}
         return self._state(), float(reward), True, info

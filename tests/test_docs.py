@@ -1,0 +1,51 @@
+"""Documentation suite checks: every intra-repo markdown link resolves.
+
+Runs in tier-1 and in the CI ``docs`` job. External links (http/https/
+mailto) are out of scope; anchors are stripped before the existence
+check. Inline-code and fenced-code spans are ignored so ISA syntax
+examples don't false-positive.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: every tracked markdown file that carries intra-repo links
+DOC_FILES = sorted(
+    p for p in list(REPO.glob("*.md")) + list((REPO / "docs").glob("*.md"))
+)
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_INLINE_CODE = re.compile(r"`[^`]*`")
+
+
+def _links(md_path: Path) -> list[str]:
+    text = _FENCE.sub("", md_path.read_text())
+    text = _INLINE_CODE.sub("", text)
+    return _LINK.findall(text)
+
+
+def test_doc_files_exist():
+    names = {p.name for p in DOC_FILES}
+    assert {"README.md", "ROADMAP.md"} <= names
+    assert any(p.parent.name == "docs" for p in DOC_FILES)
+
+
+@pytest.mark.parametrize("md_path", DOC_FILES, ids=lambda p: str(
+    p.relative_to(REPO)))
+def test_intra_repo_links_resolve(md_path: Path):
+    broken = []
+    for target in _links(md_path):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (md_path.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append(target)
+    assert not broken, (f"{md_path.relative_to(REPO)}: broken intra-repo "
+                        f"links {broken}")
