@@ -235,6 +235,55 @@ def bench_multi_device(seq_len: int = 64,
             json.dumps(bench, sort_keys=True))
 
 
+def bench_obs_overhead(seq_len: int = 16,
+                       repeats: int = 7) -> tuple[str, float, str]:
+    """``obs.overhead.*`` row: tracer-on vs tracer-off simulation wall
+    time on one registry LM program.
+
+    The observability contract says tracing is free when off (the
+    ``trace is None`` fast path in ``scheduler.simulate``) and cheap
+    when on (lazy replay — nothing per instruction); this row pins
+    both — enabled overhead must stay under 15%. Off/on reps are
+    interleaved and min-of-N timed, so a load ramp on a shared CI
+    runner hits both sides alike instead of flaking the ratio.
+    """
+    from repro.obs import Tracer
+    prog = compile_network(EXEC_NETWORK, seq_len=seq_len, opt_level=1)
+    simulate_program(prog)              # warm imports/caches
+    simulate_program(prog, tracer=Tracer())
+
+    off_times, on_times, tracers = [], [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        simulate_program(prog)
+        off_times.append(time.perf_counter() - t0)
+        tr = Tracer()
+        t0 = time.perf_counter()
+        simulate_program(prog, tracer=tr)
+        on_times.append(time.perf_counter() - t0)
+        tracers.append(tr)
+
+    off_s, on_s = min(off_times), min(on_times)
+    overhead_pct = 100.0 * (on_s - off_s) / max(off_s, 1e-9)
+    n_spans = len(tracers[-1].to_chrome()["traceEvents"])
+    closure_ok = not tracers[-1].counters.closure_errors()
+    assert overhead_pct < 15.0, \
+        f"tracer-on simulation overhead {overhead_pct:.1f}% >= 15%"
+    assert closure_ok, "traced simulation failed cycle-accounting closure"
+    bench = {
+        "BENCH": "obs.overhead",
+        "network": EXEC_NETWORK,
+        "seq_len": seq_len,
+        "sim_off_s": round(off_s, 5),
+        "sim_on_s": round(on_s, 5),
+        "overhead_pct": round(overhead_pct, 2),
+        "trace_events": n_spans,
+        "closure_ok": closure_ok,
+    }
+    return (f"obs.overhead.{EXEC_NETWORK}", 1e6 * on_s,
+            json.dumps(bench, sort_keys=True))
+
+
 def bench_dse_sim_gap(smoke: bool = False) -> list[tuple[str, float, str]]:
     """``dse.sim_gap.*`` rows: the analytical latency model the DSE
     explores with vs ``simulate_program`` on the compiled ``-O1``
@@ -259,6 +308,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     for arch in ("resnet18", "mobilenet_v2"):
         rows.append(bench_cnn_execute(arch, smoke=smoke))
     rows.append(bench_multi_device(seq_len=16 if smoke else 64))
+    rows.append(bench_obs_overhead(seq_len=16 if smoke else 64))
     rows.extend(bench_dse_sim_gap(smoke=smoke))
     return rows
 

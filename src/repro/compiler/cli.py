@@ -103,6 +103,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "synthetic weights via --backend (summary mode); "
                         "CNN programs run end to end through the spatial "
                         "im2col chain, LM programs layer by layer")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="simulate with the repro.obs tracer and write a "
+                        "Chrome trace-event JSON (open in Perfetto; "
+                        "summary mode)")
+    p.add_argument("--profile", action="store_true",
+                   help="render the per-layer/per-core utilization "
+                        "report from a traced simulation (summary mode)")
     p.add_argument("-o", "--output", default=None,
                    help="write asm/bin to a file instead of stdout")
     return p
@@ -316,6 +323,23 @@ def main(argv: list[str] | None = None) -> int:
                                    batches=args.batches))
         else:
             print(summarize(prog, simulate=args.simulate))
+        if args.trace or args.profile:
+            from repro.obs import Tracer, profile_report
+            tracer = Tracer()
+            simulate_program(prog, batches=args.batches, tracer=tracer)
+            errs = tracer.counters.closure_errors()
+            if errs:
+                print("error: cycle accounting failed to close:",
+                      file=sys.stderr)
+                for e in errs:
+                    print(f"  {e}", file=sys.stderr)
+                return 1
+            if args.trace:
+                tracer.save(args.trace)
+                n_events = len(tracer.to_chrome()["traceEvents"])
+                print(f"trace     {args.trace} ({n_events} events)")
+            if args.profile:
+                print(profile_report(tracer), end="")
         if args.execute:
             print(execute_report(prog, backend=args.backend))
         return 0

@@ -597,12 +597,53 @@ class BundleSim:
         return agg
 
 
-def simulate_bundle(mdp: MultiDeviceProgram,
-                    batches: int = 1) -> BundleSim:
-    """Per-device event-driven simulation + cross-device aggregation."""
-    from repro.core.scheduler import simulate_program
-    sims = [simulate_program(p) for p in mdp.devices]
+def simulate_bundle(mdp: MultiDeviceProgram, batches: int = 1,
+                    tracer=None) -> BundleSim:
+    """Per-device event-driven simulation + cross-device aggregation.
+
+    ``tracer`` (a ``repro.obs.Tracer``; default off) records every
+    device's spans on its own track group, placed on the bundle's
+    global timeline: pipeline stages start after the prior stages and
+    link edges they wait on (link transfers get their own track), and
+    filter plans share the per-layer cross-device-max window so the
+    lockstep idle shows up explicitly. The trace decomposes one
+    traversal — its makespan is ``latency_cycles`` (== ``total_cycles``
+    at ``batches=1``, the configuration the closure tests pin).
+    """
+    from repro.core.scheduler import (ProgramSim, record_program_trace,
+                                      simulate_layers)
+    tracing = tracer is not None and getattr(tracer, "enabled", False)
+    sims = [ProgramSim(simulate_layers(p, collect_traces=tracing))
+            for p in mdp.devices]
     edge_cycles = [mdp.plan.link.cycles(e.nbytes) for e in mdp.edges] \
         if mdp.plan.kind == "pipeline" else []
-    return BundleSim(kind=mdp.plan.kind, batches=max(1, int(batches)),
-                     device_sims=sims, edge_cycles=edge_cycles)
+    bs = BundleSim(kind=mdp.plan.kind, batches=max(1, int(batches)),
+                   device_sims=sims, edge_cycles=edge_cycles)
+    if not tracing:
+        return bs
+    latency = bs.latency_cycles
+    if mdp.plan.kind == "pipeline":
+        offset = 0
+        for d, (prog, ps) in enumerate(zip(mdp.devices, sims)):
+            record_program_trace(tracer, d, prog.device.name, prog,
+                                 ps.layers, offset=offset)
+            # everything outside this device's own stage window —
+            # upstream/downstream stages and the link edges — is idle
+            # for all six of its tracks
+            tracer.pad_idle(d, latency - ps.total_cycles)
+            offset += ps.total_cycles
+            for e, c in zip(mdp.edges, edge_cycles):
+                if e.src_device != d:
+                    continue
+                tracer.record_link(d, e.dst_device, offset, c, e.nbytes,
+                                   f"L{e.src_layer}->L{e.dst_layer}")
+                offset += c
+    else:  # filter: data-parallel lockstep, shared per-layer windows
+        n_layers = len(sims[0].layers)
+        windows = [max(s.layers[i].cycles for s in sims)
+                   for i in range(n_layers)]
+        for d, (prog, ps) in enumerate(zip(mdp.devices, sims)):
+            record_program_trace(tracer, d, prog.device.name, prog,
+                                 ps.layers, windows=windows)
+    tracer.set_makespan(latency)
+    return bs

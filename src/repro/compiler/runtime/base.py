@@ -109,9 +109,16 @@ class ExecutorBackend:
     #: registry key; subclasses override ("golden", "pallas", ...)
     name = "base"
 
-    def __init__(self, program: Program, check_timing: bool = True):
+    def __init__(self, program: Program, check_timing: bool = True,
+                 tracer=None):
         self.program = program
         self.check_timing = check_timing
+        # measured (wall-clock) timeline sink; the null tracer keeps
+        # every hook free when observability is off
+        if tracer is None:
+            from repro.obs import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         self._weights: dict[int, LayerWeights] = {}
 
     # -- weight binding ----------------------------------------------------
@@ -183,13 +190,18 @@ class ExecutorBackend:
         outs = []
         if lp.lut is not None:
             self._check_stream(lp, lp.lut)
-            outs.append(self._run_core(lp, lp.lut, _slice(0, lp.n_lut),
-                                       wts.w_lut, wts.s_lut))
+            with self.tracer.measure(f"exec.{self.name}.lut", lp.name,
+                                     layer=lp.index, n=lp.n_lut):
+                outs.append(self._run_core(lp, lp.lut, _slice(0, lp.n_lut),
+                                           wts.w_lut, wts.s_lut))
         if lp.dsp is not None:
             self._check_stream(lp, lp.dsp)
-            outs.append(self._run_core(lp, lp.dsp,
-                                       _slice(lp.n_lut, lp.dims.n),
-                                       wts.w_dsp, wts.s_dsp))
+            with self.tracer.measure(f"exec.{self.name}.dsp", lp.name,
+                                     layer=lp.index,
+                                     n=lp.dims.n - lp.n_lut):
+                outs.append(self._run_core(lp, lp.dsp,
+                                           _slice(lp.n_lut, lp.dims.n),
+                                           wts.w_dsp, wts.s_dsp))
         return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
     def _staged_activations(self, lp: LayerProgram,

@@ -58,13 +58,19 @@ class MultiDeviceExecutor:
     """Functional executor over a compiled multi-device bundle."""
 
     def __init__(self, bundle, backend: str | type[ExecutorBackend]
-                 = "golden", **backend_kwargs):
+                 = "golden", tracer=None, **backend_kwargs):
         from repro.compiler.partition import validate_bundle
         from repro.compiler.runtime import get_backend
         validate_bundle(bundle)
         self.bundle = bundle
+        if tracer is None:
+            from repro.obs import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         cls = get_backend(backend) if isinstance(backend, str) else backend
-        self.executors = [cls(p, **backend_kwargs) for p in bundle.devices]
+        # per-device executors share the bundle's measured timeline
+        self.executors = [cls(p, tracer=tracer, **backend_kwargs)
+                          for p in bundle.devices]
         self.layers = self._global_layers()
 
     # -- global layer table -------------------------------------------------
@@ -165,18 +171,21 @@ class MultiDeviceExecutor:
         gl = self.layers[index]
         x_q = jnp.asarray(x_q, jnp.int8)
         outs = []
-        for d, li, lo, hi in gl.placements:
-            if hi <= lo:
-                continue
-            x_d = x_q
-            if gl.depthwise and hi - lo != gl.dims.n:
-                # a filter shard of a depthwise layer only consumes its
-                # own channels' input slices — split column order is the
-                # natural channel order for depthwise (LUT columns are
-                # the first n_lut channels), so channel bounds slice
-                # both the spatial [h, w, C] and staged [m, k, N] forms
-                x_d = x_q[..., lo:hi]
-            outs.append(self.executors[d].run_layer(li, x_d))
+        with self.tracer.measure("exec.multi", gl.name, layer=index,
+                                 shards=len(gl.placements)):
+            for d, li, lo, hi in gl.placements:
+                if hi <= lo:
+                    continue
+                x_d = x_q
+                if gl.depthwise and hi - lo != gl.dims.n:
+                    # a filter shard of a depthwise layer only consumes
+                    # its own channels' input slices — split column
+                    # order is the natural channel order for depthwise
+                    # (LUT columns are the first n_lut channels), so
+                    # channel bounds slice both the spatial [h, w, C]
+                    # and staged [m, k, N] forms
+                    x_d = x_q[..., lo:hi]
+                outs.append(self.executors[d].run_layer(li, x_d))
         return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
     def run(self, x_q) -> jnp.ndarray:

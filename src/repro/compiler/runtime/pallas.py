@@ -92,8 +92,8 @@ class PallasExecutor(ExecutorBackend):
     _cache_misses = 0
 
     def __init__(self, program, check_timing: bool = False,
-                 mode: str = "auto"):
-        super().__init__(program, check_timing=check_timing)
+                 mode: str = "auto", tracer=None):
+        super().__init__(program, check_timing=check_timing, tracer=tracer)
         self.mode = mode
         self._fns = self._program_fns(program, mode)
 

@@ -152,18 +152,81 @@ class DeadlockError(RuntimeError):
     pass
 
 
+@dataclasses.dataclass
+class SimTrace:
+    """Raw per-instruction spans of one :func:`simulate` call (one core
+    in one layer window), consumed by ``repro.obs``.
+
+    ``spans`` holds ``(engine, kind, start, dur, channel, instr)``
+    tuples — start/dur in cycles relative to the window start, kind is
+    ``"busy"``/``"sync"``/``"stall"``, instr the raw instruction object
+    (names resolve at export) — in issue order, which is deterministic
+    for a fixed program. ``queue_peak`` is the maximum token-queue
+    depth observed per channel (buffer-slot occupancy for the
+    ``*slot`` channels).
+    """
+    spans: list = dataclasses.field(default_factory=list)
+    queue_peak: dict = dataclasses.field(default_factory=dict)
+
+
+class LazySimTrace:
+    """Deferred span capture for one core's layer window.
+
+    Holds the stream refs and replays the (deterministic) simulation
+    with span recording on first access. This is what keeps tracer-on
+    ``simulate_program`` within the <15% overhead budget: the timed
+    simulation runs the plain hot loop, and the per-instruction span
+    cost lands in the export step (``Tracer.to_chrome``), where it
+    belongs. Replay equals the live run instruction for instruction
+    because :func:`simulate` is deterministic for fixed streams.
+    """
+
+    __slots__ = ("_streams", "_tokens", "_st")
+
+    def __init__(self, streams, initial_tokens):
+        self._streams = streams
+        self._tokens = initial_tokens
+        self._st = None
+
+    def _force(self) -> SimTrace:
+        if self._st is None:
+            st = SimTrace()
+            simulate(self._streams, self._tokens, trace=st)
+            self._st = st
+        return self._st
+
+    @property
+    def spans(self) -> list:
+        return self._force().spans
+
+    @property
+    def queue_peak(self) -> dict:
+        return self._force().queue_peak
+
+
 def simulate(streams: dict[str, list[Op]],
-             initial_tokens: dict[str, int] | None = None) -> SimResult:
+             initial_tokens: dict[str, int] | None = None,
+             trace: SimTrace | None = None) -> SimResult:
     """Run the three engine streams to completion.
 
     Channels are FIFOs of token post-times. A wait op blocks until a
     token with post_time <= infinity exists; the engine resumes at
     max(own_clock, post_time). Initial tokens (e.g. free buffer slots
     for double buffering) are available at t=0.
+
+    ``trace`` (optional) collects per-instruction spans into a
+    :class:`SimTrace`; the default ``None`` keeps the hot loop on the
+    historical no-bookkeeping path.
     """
     tokens: dict[str, list[int]] = {}
     for ch, cnt in (initial_tokens or {}).items():
         tokens[ch] = [0] * cnt
+
+    spans = trace.spans if trace is not None else None
+    peaks = trace.queue_peak if trace is not None else None
+    if peaks is not None:
+        for ch, q in tokens.items():
+            peaks[ch] = len(q)
 
     idx = {e: 0 for e in streams}
     clock = {e: 0 for e in streams}
@@ -186,17 +249,37 @@ def simulate(streams: dict[str, list[Op]],
             while runnable(e):
                 op = stream[idx[e]]
                 t = traces[e]
+                # span tuples carry the raw instr object; opcode names
+                # resolve lazily at trace export (enum .name lookups in
+                # the hot loop would dominate the traced-sim cost)
                 if op.channel is not None and _is_wait(op):
                     post = tokens[op.channel].pop(0)
                     start = max(clock[e], post)
+                    if spans is not None:
+                        if start > clock[e]:
+                            spans.append((e, "stall", clock[e],
+                                          start - clock[e], op.channel,
+                                          None))
+                        if op.cycles:
+                            spans.append((e, "sync", start, op.cycles,
+                                          op.channel, op.instr))
                     t.wait += start - clock[e]
                     t.sync += op.cycles
                     clock[e] = start + op.cycles
                 elif op.channel is not None:  # send
+                    if spans is not None and op.cycles:
+                        spans.append((e, "sync", clock[e], op.cycles,
+                                      op.channel, op.instr))
                     t.sync += op.cycles
                     clock[e] += op.cycles
-                    tokens.setdefault(op.channel, []).append(clock[e])
+                    q = tokens.setdefault(op.channel, [])
+                    q.append(clock[e])
+                    if peaks is not None and len(q) > peaks.get(op.channel, 0):
+                        peaks[op.channel] = len(q)
                 else:
+                    if spans is not None and op.cycles:
+                        spans.append((e, "busy", clock[e], op.cycles,
+                                      None, op.instr))
                     t.busy += op.cycles
                     clock[e] += op.cycles
                 idx[e] += 1
@@ -287,6 +370,9 @@ class LayerSim:
     name: str
     lut: SimResult | None
     dsp: SimResult | None
+    # per-core SimTrace objects when the sim ran with tracing on
+    traces: dict | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def cycles(self) -> int:
@@ -322,8 +408,65 @@ class ProgramSim:
         return agg
 
 
+def simulate_layers(prog, collect_traces: bool = False) -> list[LayerSim]:
+    """Event-driven sim of every layer of a single-device program.
+
+    With ``collect_traces`` each :class:`LayerSim` carries per-core
+    :class:`LazySimTrace` handles (``repro.obs`` consumes them); the
+    timed sim itself stays on the plain fast path — span capture
+    replays on first access.
+    """
+    layers = []
+    for lp in prog.layers:
+        sims, traces = {}, {}
+        for attr in ("lut", "dsp"):
+            cp = getattr(lp, attr)
+            if cp is None:
+                sims[attr] = None
+                continue
+            # sim_tokens() arms inter-layer barrier waits at t=0: under
+            # the Eq.-10 synchronous chain the previous layer has drained.
+            tokens = cp.sim_tokens()
+            sims[attr] = simulate(cp.streams, tokens)
+            if collect_traces:
+                traces[attr] = LazySimTrace(cp.streams, tokens)
+        layers.append(LayerSim(lp.name, sims["lut"], sims["dsp"],
+                               traces=traces or None))
+    return layers
+
+
+def record_program_trace(tracer, device: int, name: str, prog, layers,
+                         offset: int = 0,
+                         windows: list[int] | None = None) -> int:
+    """Feed simulated layers into a ``repro.obs.Tracer``.
+
+    One ``record_layer`` call per placement window; ``windows``
+    overrides the per-layer window cycles (bundle *filter* plans share
+    the cross-device max per layer, §multi-FPGA), otherwise each
+    layer's own makespan is its window. Returns the device-local end
+    offset so callers can chain stages.
+    """
+    tracer.begin_device(device, name)
+    for i, (lp, ls) in enumerate(zip(prog.layers, layers)):
+        window = ls.cycles if windows is None else windows[i]
+        core_results = {}
+        for attr in ("lut", "dsp"):
+            sim = getattr(ls, attr)
+            if sim is None:
+                continue
+            st = (ls.traces or {}).get(attr)
+            core_results[attr] = (sim, st)
+            cp = getattr(lp, attr)
+            tracer.record_dma(device, attr, cp.bytes_fetched,
+                              cp.bytes_written)
+        tracer.record_layer(device, lp.index, lp.name, offset, window,
+                            core_results)
+        offset += window
+    return offset
+
+
 def simulate_program(prog, opt_level: int | None = None,
-                     batches: int = 1) -> "ProgramSim":
+                     batches: int = 1, tracer=None) -> "ProgramSim":
     """Run a compiled ``repro.compiler.Program`` through the event-driven
     engine model, layer by layer (inter-layer synchronous, §3.1): the
     compiler is the single source of truth for the streams; this is the
@@ -341,23 +484,24 @@ def simulate_program(prog, opt_level: int | None = None,
     covers (pipeline plans overlap them across stages); for a plain
     single-device program ``batches`` is ignored (its makespan for B
     inputs is just ``B * total_cycles``).
+
+    ``tracer`` (a ``repro.obs.Tracer``; default off) records
+    per-instruction spans and cycle-accounted counters while
+    simulating — the trace *decomposes* the returned makespan, it never
+    changes it.
     """
+    tracing = tracer is not None and getattr(tracer, "enabled", False)
     if hasattr(prog, "devices"):     # MultiDeviceProgram bundle
         from repro.compiler.partition import optimize_bundle, simulate_bundle
         if opt_level is not None:
             prog = optimize_bundle(prog, opt_level, validate=False)
-        return simulate_bundle(prog, batches=batches)
+        return simulate_bundle(prog, batches=batches,
+                               tracer=tracer if tracing else None)
     if opt_level is not None:
         from repro.compiler.passes import optimize_program
         prog = optimize_program(prog, opt_level, validate=False)
-    layers = []
-    for lp in prog.layers:
-        sims = {}
-        for attr in ("lut", "dsp"):
-            cp = getattr(lp, attr)
-            # sim_tokens() arms inter-layer barrier waits at t=0: under
-            # the Eq.-10 synchronous chain the previous layer has drained.
-            sims[attr] = (simulate(cp.streams, cp.sim_tokens())
-                          if cp is not None else None)
-        layers.append(LayerSim(lp.name, sims["lut"], sims["dsp"]))
-    return ProgramSim(layers)
+    ps = ProgramSim(simulate_layers(prog, collect_traces=tracing))
+    if tracing:
+        record_program_trace(tracer, 0, prog.device.name, prog, ps.layers)
+        tracer.set_makespan(ps.total_cycles)
+    return ps

@@ -38,6 +38,7 @@ from repro.dse.evaluator import (
     config_fingerprint,
     gemm_specs,
 )
+from repro.obs import MetricsRegistry
 
 
 #: calibration-report columns, in CSV order
@@ -62,6 +63,9 @@ class SearchResult:
     sim_gap_pct: float | None = None
     elites: list[dict] = dataclasses.field(default_factory=list)
     evaluator_cache: dict | None = None
+    # repro.obs.MetricsRegistry snapshot of the run (per-episode
+    # reward/latency series, elite sim-gap observations, cache counters)
+    metrics: dict | None = None
 
     def table3_row(self) -> dict:
         """The paper's Table 3 columns (+ the simulated-latency column
@@ -176,7 +180,9 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
                verbose: bool = False,
                simulate_elites: bool = False, top_k: int = 4,
                sim_every: int = 20, opt_level: int = 1,
-               cache_size: int = 32, seq_len: int = 64) -> SearchResult:
+               cache_size: int = 32, seq_len: int = 64,
+               metrics: MetricsRegistry | None = None) -> SearchResult:
+    reg = metrics if metrics is not None else MetricsRegistry()
     dev: FPGADevice = DEVICES[device]
     layer_specs = list(specs) if specs is not None \
         else gemm_specs(network, seq_len=seq_len)
@@ -211,6 +217,10 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
         agent.learn(n_updates=len(transitions))
         agent.decay_noise()
         rewards.append(final_r)
+        reg.incr("dse.episodes")
+        reg.observe("dse.episode.reward", final_r)
+        if "latency_ms" in info:
+            reg.observe("dse.episode.latency_ms", info["latency_ms"])
         # fingerprint in both modes: the single-tier calibration rows
         # deduplicate too (a converged agent re-emits its best config)
         elites.add(final_r, info, transitions=transitions,
@@ -221,7 +231,9 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
         if final_r > best_reward:
             best_reward, best_info = final_r, info
         if evaluator and (ep + 1) % max(sim_every, 1) == 0:
-            _correct_elites(elites, evaluator, agent, verbose=verbose)
+            reg.incr("dse.elites.corrected",
+                     _correct_elites(elites, evaluator, agent,
+                                     verbose=verbose))
         if verbose and (ep + 1) % 10 == 0:
             print(f"  ep {ep + 1:4d}  reward {final_r:+.4f}  "
                   f"best {best_reward:+.4f}  "
@@ -231,7 +243,8 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
                           best_info=best_info, rewards=rewards,
                           episodes=episodes, wall_s=time.time() - t0)
     if evaluator:
-        _correct_elites(elites, evaluator, agent, verbose=verbose)
+        reg.incr("dse.elites.corrected",
+                 _correct_elites(elites, evaluator, agent, verbose=verbose))
         winner = elites.best
         if winner is not None:
             result.best_reward = float(winner.reward)
@@ -250,4 +263,16 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
         result.analytical_latency_ms = best_info["latency_ms"]
         result.elites = [_calibration_row(i + 1, e)
                          for i, e in enumerate(elites.elites)]
+    reg.gauge("dse.best_reward", result.best_reward)
+    if result.sim_gap_pct is not None:
+        reg.gauge("dse.best.sim_gap_pct", result.sim_gap_pct)
+    for row in result.elites:
+        if row.get("gap_pct") is not None:
+            reg.observe("dse.elite.sim_gap_pct", row["gap_pct"])
+    if result.evaluator_cache:
+        reg.gauge("dse.program_cache.hits",
+                  result.evaluator_cache["hits"])
+        reg.gauge("dse.program_cache.misses",
+                  result.evaluator_cache["misses"])
+    result.metrics = reg.snapshot()
     return result

@@ -30,6 +30,7 @@ from repro.configs import registry
 from repro.data.synthetic import SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models.lm import HeteroQuantConfig
+from repro.obs import METRICS
 from repro.parallel.sharding import DEFAULT_RULES
 from repro.serve.engine import make_cache, make_decode_fn, make_prefill_fn
 
@@ -77,10 +78,15 @@ class ProgramCache:
             if image is not None:
                 self._images.move_to_end(key)
                 self.hits += 1
+                METRICS.incr("serve.program_cache.hit")
                 return image
+        t0 = time.time()
         image = self._compile(key)
+        METRICS.observe("serve.program_cache.compile_ms",
+                        (time.time() - t0) * 1e3)
         with self._lock:
             self.misses += 1
+            METRICS.incr("serve.program_cache.miss")
             self._images[key] = image
             while len(self._images) > self.maxsize:
                 self._images.popitem(last=False)
@@ -137,6 +143,9 @@ def main() -> None:
     ap.add_argument("--accel-partition", choices=("pipeline", "filter"),
                     default=None,
                     help="partition plan for --accel-devices > 1")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="export the run's metrics registry (.json or "
+                         ".csv) on exit")
     args = ap.parse_args()
 
     arch = registry.get(args.arch)
@@ -174,6 +183,7 @@ def main() -> None:
         logits, cache = prefill_fn(params, batch, cache)
         logits = jax.block_until_ready(logits)
         t_prefill = time.time() - t0
+        METRICS.observe("serve.request.prefill_ms", t_prefill * 1e3)
 
         tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                          axis=-1)[:, None].astype(jnp.int32)
@@ -186,8 +196,13 @@ def main() -> None:
             out.append(tok)
         jax.block_until_ready(tok)
         t_decode = time.time() - t0
+        METRICS.observe("serve.request.decode_ms", t_decode * 1e3)
+        METRICS.observe("serve.request.decode_ms_per_step",
+                        t_decode * 1e3 / max(args.new_tokens - 1, 1))
 
         total_new = args.batch * args.new_tokens
+        METRICS.gauge("serve.request.decode_tok_per_s",
+                      total_new / max(t_decode, 1e-9))
         if args.quantize:
             # the deployable ISA program for this serving config — the
             # LRU means repeat requests under the same key ship the
@@ -211,6 +226,9 @@ def main() -> None:
               f"{total_new / max(t_decode, 1e-9):.0f} tok/s")
         sample = jnp.concatenate(out, axis=1)[0, :16]
         print("sample tokens:", list(map(int, sample)))
+        if args.metrics:
+            METRICS.save(args.metrics)
+            print(f"# metrics written to {args.metrics}")
 
 
 if __name__ == "__main__":

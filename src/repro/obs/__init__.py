@@ -1,0 +1,28 @@
+"""repro.obs — zero-dependency tracing & metrics for the N3H-Core stack.
+
+Three pieces, one contract:
+
+* :class:`Tracer` / :data:`NULL_TRACER` — Chrome trace-event (Perfetto)
+  span collection from the cycle-accurate simulator and wall-clock
+  executor/driver timings; off by default via the null-object fast
+  path.
+* :class:`Counters` — derived per-core cycle accounting whose
+  decomposition must *close*: busy + sync + stall + idle == the
+  ``simulate_program`` makespan on every core track.
+* :class:`MetricsRegistry` / :data:`METRICS` — structured
+  counters/gauges/observations for serving and DSE with CSV/JSON
+  export.
+
+See ``docs/observability.md`` for usage.
+"""
+from .counters import Counters, TrackCounters
+from .metrics import METRICS, MetricsRegistry
+from .report import profile_report
+from .trace import NULL_TRACER, NullTracer, Tracer, validate_chrome_trace
+
+__all__ = [
+    "Counters", "TrackCounters",
+    "METRICS", "MetricsRegistry",
+    "profile_report",
+    "NULL_TRACER", "NullTracer", "Tracer", "validate_chrome_trace",
+]

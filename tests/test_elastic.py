@@ -1,6 +1,7 @@
 """Elastic scaling: checkpoint written under a 4-device mesh restores
 onto a 2-device mesh with different shardings (subprocess: forced host
 devices, like the dry-run)."""
+import os
 import subprocess
 import sys
 
@@ -36,7 +37,12 @@ print("ELASTIC_OK")
 
 
 def test_elastic_mesh_rescale():
+    # Inherit the parent env (a stripped env loses HOME and the XLA
+    # compilation cache, which pushed cold-start past the old 300 s
+    # limit on slow containers); JAX_PLATFORMS=cpu skips backend
+    # probing so the forced host devices come up immediately.
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
     res = subprocess.run([sys.executable, "-c", SCRIPT],
-                         capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         capture_output=True, text=True, timeout=900,
+                         env=env)
     assert "ELASTIC_OK" in res.stdout, res.stdout + res.stderr

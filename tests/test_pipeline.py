@@ -2,6 +2,7 @@
 
 Needs >1 device, so the check runs in a subprocess with forced host
 devices (the same mechanism as the dry-run)."""
+import os
 import subprocess
 import sys
 
@@ -43,7 +44,12 @@ print("PIPELINE_OK")
 
 
 def test_gpipe_matches_serial():
+    # Inherit the parent env (a stripped env loses HOME and the XLA
+    # compilation cache, which pushed cold-start past the old 300 s
+    # limit on slow containers); JAX_PLATFORMS=cpu skips backend
+    # probing so the forced host devices come up immediately.
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
     res = subprocess.run([sys.executable, "-c", SCRIPT],
-                         capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         capture_output=True, text=True, timeout=900,
+                         env=env)
     assert "PIPELINE_OK" in res.stdout, res.stdout + res.stderr
