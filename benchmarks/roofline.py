@@ -21,6 +21,12 @@ Caveats carried into the table:
 
 Hardware constants (task spec): 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI.
+
+Also emits analytic ``kernels.fused.*`` rows (``--fused``) straight
+from the compiled programs: launch-count and DDR-traffic deltas of the
+fused one-launch-per-layer executor path vs the per-partition batched
+path (the removed ``L{i}.col`` im2col staging). ``--csv PATH`` writes
+the rows as the CSV artifact CI uploads.
 """
 from __future__ import annotations
 
@@ -188,6 +194,73 @@ def to_markdown(rows: list[dict]) -> str:
     return hdr + "\n".join(lines)
 
 
+def fused_kernel_rows(smoke: bool = True) -> list[tuple[str, float, str]]:
+    """``kernels.fused.*`` rows from the *compiled programs* (analytic,
+    no execution): per network, launch count and DDR traffic of the
+    fused one-launch-per-layer path vs the per-partition batched path.
+
+    The launch delta is structural (one call per layer vs one per
+    partition, plus the dropped host-side concat); the DDR delta is the
+    ``L{i}.col`` im2col staging the fused conv kernels eliminate — the
+    kh*kw-duplicated column matrix each conv used to write to and
+    re-fetch from DDR, now replaced by reading the raw spatial source.
+    """
+    import math
+
+    from repro.compiler import compile_network
+
+    cases = [("resnet18", {"in_hw": 28, "width": 0.25} if smoke else {}),
+             ("mobilenet_v2", {"in_hw": 28, "width": 0.25} if smoke else {}),
+             ("llama3.2-1b", {"seq_len": 16 if smoke else 64})]
+    rows = []
+    for net, kw in cases:
+        prog = compile_network(net, opt_level=1, **kw)
+        launches_fused = len(prog.layers)
+        launches_split = sum((lp.lut is not None) + (lp.dsp is not None)
+                             for lp in prog.layers)
+        concats = sum((lp.lut is not None) and (lp.dsp is not None)
+                      for lp in prog.layers)
+        col_bytes = spatial_bytes = 0
+        for lp in prog.layers:
+            if lp.geometry is None:
+                continue
+            g, geo = lp.dims, lp.geometry
+            col_bytes += math.ceil(
+                g.m * g.k * (g.n if lp.depthwise else 1) * lp.bits_a / 8)
+            spatial_bytes += math.ceil(
+                geo.in_hw * geo.in_hw * geo.c_in * lp.bits_a / 8)
+        # staging costs a write of the column matrix plus its re-fetch;
+        # the fused path fetches the spatial source once
+        ddr_delta = 2 * col_bytes - spatial_bytes
+        blob = json.dumps({
+            "BENCH": "kernels.fused.roofline",
+            "network": net,
+            "layers": len(prog.layers),
+            "launches_fused": launches_fused,
+            "launches_split": launches_split,
+            "launch_delta": launches_split - launches_fused,
+            "concats_removed": concats,
+            "col_staging_bytes": col_bytes,
+            "spatial_fetch_bytes": spatial_bytes,
+            "ddr_traffic_delta_bytes": max(ddr_delta, 0),
+        }, sort_keys=True)
+        rows.append((f"kernels.fused.{net}",
+                     float(launches_split - launches_fused), blob))
+    return rows
+
+
+def rows_to_csv(rows: list[tuple[str, float, str]], path: str) -> None:
+    """Write bench rows (name, value, derived-JSON) as the CSV artifact
+    CI uploads."""
+    import csv
+
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["name", "value_us", "derived"])
+        for r in rows:
+            w.writerow(r)
+
+
 def main() -> list[tuple[str, float, str]]:
     import os
     rows = []
@@ -205,6 +278,7 @@ def main() -> list[tuple[str, float, str]]:
                 1e6 * r["bound_s"],
                 f"dom={r['dominant']} useful={r['useful_ratio']:.2f} "
                 f"frac={r['roofline_frac']:.3f}"))
+    rows.extend(fused_kernel_rows())
     return rows
 
 
@@ -212,12 +286,33 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="dryrun_single_pod.json")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="emit only the kernels.fused.* analytic rows "
+                         "(no dry-run artifact needed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced program geometry for the fused rows")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="also write the rows as a CSV artifact")
     args = ap.parse_args()
-    with open(args.json) as f:
-        records = json.load(f)
-    rows = analyse(records)
-    if args.markdown:
-        print(to_markdown(rows))
+    if args.fused:
+        rows = fused_kernel_rows(smoke=args.smoke)
+        if args.csv:
+            rows_to_csv(rows, args.csv)
+        for name, val, blob in rows:
+            print(json.dumps({"name": name, "value": val,
+                              **json.loads(blob)}))
     else:
-        for r in rows:
-            print(json.dumps(r))
+        with open(args.json) as f:
+            records = json.load(f)
+        rows = analyse(records)
+        if args.csv:
+            bench_rows = [(f"roofline.{r['arch']}.{r['shape']}",
+                           1e6 * r.get("bound_s", 0.0),
+                           json.dumps(r, sort_keys=True))
+                          for r in rows if r.get("status") == "ok"]
+            rows_to_csv(bench_rows + fused_kernel_rows(), args.csv)
+        if args.markdown:
+            print(to_markdown(rows))
+        else:
+            for r in rows:
+                print(json.dumps(r))

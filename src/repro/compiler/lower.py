@@ -88,7 +88,8 @@ def _clamp16(v: float) -> int:
 
 def lower_lut_layer(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
                     bits_w: int, bits_a: int, depthwise: bool = False,
-                    addrs: LayerAddrs = LayerAddrs()) -> CoreProgram:
+                    addrs: LayerAddrs = LayerAddrs(),
+                    act_bytes: float | None = None) -> CoreProgram:
     """Lower one layer partition onto the LUT-core.
 
     Cycle model: a (m x n) output tile accumulates over ceil(K_g/K)
@@ -96,6 +97,11 @@ def lower_lut_layer(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
     pairs; plus a fixed array fill/drain per tile. Result tiles are
     written back to DDR requantized to the next layer's activation
     bit-width (§3.1), approximated with ``bits_a``.
+
+    ``act_bytes`` overrides the activation-fetch footprint: conv layers
+    pass the raw spatial NHWC source size (the fused kernels generate
+    im2col patches on chip, so DMA never moves the kh*kw-duplicated
+    column matrix).
     """
     C = isa.CoreSel.LUT
     nt_m = math.ceil(g.m / cfg.m)
@@ -112,6 +118,8 @@ def lower_lut_layer(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
         tile_exec = nt_k * bits_w * bits_a + cfg.pipeline_fill
         bytes_l = g.m * g.k * bits_a / 8.0      # serialized activation planes
         bytes_r_tile = cfg.n * g.k * bits_w / 8.0   # one weight column-tile
+    if act_bytes is not None:
+        bytes_l = float(act_bytes)              # spatial source, no im2col dup
     bytes_out_tile = cfg.m * cfg.n * bits_a / 8.0   # requantized write-back
 
     # Activation residency: the activation buffer pool holds M x D_a x K
@@ -196,7 +204,8 @@ def lower_lut_layer(g: GemmDims, cfg: LutCoreConfig, dev: FPGADevice,
 
 def lower_dsp_layer(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
                     depthwise: bool = False,
-                    addrs: LayerAddrs = LayerAddrs()) -> CoreProgram:
+                    addrs: LayerAddrs = LayerAddrs(),
+                    act_bytes: float | None = None) -> CoreProgram:
     """Lower one layer partition onto the DSP-core.
 
     The register arrays compute an [R x 16] x [16 x 16] product per
@@ -204,6 +213,10 @@ def lower_dsp_layer(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
     buffer per cycle), then 16 systolic MAC cycles. Activation row-tiles
     are double buffered; weight column-tiles are cached on chip when the
     weight buffer capacity allows, else re-fetched per row-tile.
+
+    ``act_bytes`` overrides the total activation-fetch footprint (spread
+    evenly over the row tiles) — conv layers pass the raw spatial NHWC
+    source size since the fused kernels im2col on chip.
     """
     C = isa.CoreSel.DSP
     R = cfg.n_reg_row_a
@@ -222,6 +235,8 @@ def lower_dsp_layer(g: GemmDims, cfg: DspCoreConfig, dev: FPGADevice,
         tile_exec = nt_k * kstep
         bytes_a_tile = R * g.k * bits_a_stored / 8.0
         bytes_w_tile = g.k * cfg.n_reg_col_w * 4 / 8.0  # int4 weights
+    if act_bytes is not None:
+        bytes_a_tile = float(act_bytes) / nt_m  # spatial source, no im2col dup
     bytes_out_tile = R * cfg.n_reg_col_w * bits_a_stored / 8.0
 
     # Weight resident if every column tile fits the weight buffer pool.
@@ -337,14 +352,15 @@ def lower_network(name: str, layers: list[GemmLayer],
     the activation chain. Plain GEMM layers read their producer's
     output segment directly (layer i reads layer i-1's output). Conv
     layers (a :class:`~repro.compiler.program.ConvGeometry` on the
-    ``GemmLayer``) additionally get an ``L{i}.col`` im2col staging
-    segment — the source spatial tensor (the producer named by
-    ``geometry.src_offset``, falling back to ``act.in`` when it
-    precedes the program) is staged column-matrix-first and the act
-    fetches address the staged copy. Layers are chained inter-layer
-    synchronously: each core's fetch stream for layer i>0 opens with a
-    barrier wait matched by a barrier send at the tail of its layer
-    i-1 result stream.
+    ``GemmLayer``) read the *spatial* NHWC segment of the producer
+    named by ``geometry.src_offset`` (falling back to ``act.in`` when
+    it precedes the program): the fused kernels generate im2col
+    patches on chip, so no ``L{i}.col`` staging copy exists in the DDR
+    map and the act-fetch DMA accounting covers only the raw spatial
+    footprint. Layers are chained inter-layer synchronously: each
+    core's fetch stream for layer i>0 opens with a barrier wait
+    matched by a barrier send at the tail of its layer i-1 result
+    stream.
 
     ``opt_level=0`` returns the canonical schedule; ``opt_level=1``
     additionally runs the ``passes.py`` optimization pipeline (the
@@ -397,25 +413,30 @@ def lower_network(name: str, layers: list[GemmLayer],
                             math.ceil(g.k * g_lut.n * bw[i] / 8))
         wgt_dsp = mem.alloc(f"L{i}.wgt.dsp", math.ceil(g.k * g_dsp.n * 4 / 8))
         if geom is not None:
-            # im2col staging: dense convs stage one [m, k] column
-            # matrix; depthwise layers stage a [m, k] slice per output
-            # channel (no input-channel reuse).
-            cols = g.m * g.k * (g.n if layer.depthwise else 1)
-            act_seg = mem.alloc(f"L{i}.col", math.ceil(cols * ba[i] / 8))
+            # fused conv path: act fetches read the producer's spatial
+            # NHWC segment directly; im2col happens inside the kernel,
+            # so neither DDR nor DMA ever sees the column matrix.
+            src = i - geom.src_offset
+            act_seg = out_segs[src] if src >= 0 else in_seg
+            act_bytes = math.ceil(geom.in_hw * geom.in_hw * geom.c_in
+                                  * ba[i] / 8)
         else:
             src = i - 1
             act_seg = out_segs[src] if src >= 0 else in_seg
+            act_bytes = None
         out_seg = mem.alloc(f"L{i}.out", math.ceil(g.m * g.n * ba[i] / 8))
 
         lut_cp = dsp_cp = None
         if g_lut.n > 0:
             lut_cp = lower_lut_layer(
                 g_lut, lut_cfg, dev, bw[i], ba[i], layer.depthwise,
-                LayerAddrs(wgt_lut.base, act_seg.base, out_seg.base))
+                LayerAddrs(wgt_lut.base, act_seg.base, out_seg.base),
+                act_bytes=act_bytes)
         if g_dsp.n > 0:
             dsp_cp = lower_dsp_layer(
                 g_dsp, dsp_cfg, dev, layer.depthwise,
-                LayerAddrs(wgt_dsp.base, act_seg.base, out_seg.base))
+                LayerAddrs(wgt_dsp.base, act_seg.base, out_seg.base),
+                act_bytes=act_bytes)
 
         progs.append(LayerProgram(
             index=i, name=layer.name, dims=g, n_lut=n_lut,

@@ -4,9 +4,11 @@
                validation, chaining; error taxonomy.
   golden.py  — :class:`GoldenExecutor`: contract-checking reference
                interpreter (bit-exact vs ``core/hetero_linear.py``).
-  pallas.py  — :class:`PallasExecutor`: batched fast path, one
-               ``kernels`` GEMM call per layer partition (per-program
-               JIT cache keyed on the program fingerprint).
+  pallas.py  — :class:`PallasExecutor`: fused fast path, one
+               split-aware ``kernels`` call per *layer* (im2col-free
+               convs; per-program JIT cache keyed on the program
+               fingerprint; ``fused=False`` for the per-partition
+               batched path).
   multi.py   — :class:`MultiDeviceExecutor`: steps a
                ``partition.MultiDeviceProgram`` bundle, one backend
                executor per device, with the cross-device hand-off.

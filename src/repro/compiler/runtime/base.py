@@ -7,10 +7,11 @@ against real weight codes and dequant scales. Two implementations ship:
   * ``runtime/golden.py`` — the reference interpreter: walks the
     instruction streams tile by tile, enforcing the ISA/program
     contract along the way (bit-exact, slow);
-  * ``runtime/pallas.py`` — the batched fast path: one
-    ``kernels.bitserial_matmul`` / ``kernels.int4_matmul`` call per
-    layer partition (bit-identical outputs, orders of magnitude faster,
-    Pallas kernels on TPU).
+  * ``runtime/pallas.py`` — the fused fast path: one
+    ``kernels.fused_matmul`` / ``fused_conv_matmul`` call per *layer*
+    covering both sides of the split (bit-identical outputs, orders of
+    magnitude faster, Pallas kernels on TPU; ``fused=False`` restores
+    the per-partition batched path).
 
 This module holds everything backends share: weight binding and
 validation, activation checks and im2col staging (conv layers accept
@@ -54,14 +55,14 @@ def im2col_patches(x_sp: jnp.ndarray, geom: ConvGeometry) -> jnp.ndarray:
     HWIO weight flattening ``w.reshape(k, n)`` contracts against.
     Depthwise layers keep the channel axis: slice c is the only input
     channel output channel c sees.
+
+    Delegates to ``kernels.ref.conv_patches_ref`` — the single source
+    for the patch layout, shared with the fused conv kernels' in-kernel
+    im2col and their oracles.
     """
-    kk, st, p, oh = geom.kernel, geom.stride, geom.pad, geom.out_hw
-    x = jnp.pad(x_sp, ((p, p), (p, p), (0, 0)))
-    span = st * (oh - 1) + 1
-    taps = [x[dh:dh + span:st, dw:dw + span:st, :]
-            for dh in range(kk) for dw in range(kk)]
-    pat = jnp.stack(taps, axis=2)                  # [oh, oh, kk*kk, C]
-    return pat.reshape(oh * oh, kk * kk, x_sp.shape[2])
+    from repro.kernels.ref import conv_patches_ref
+    return conv_patches_ref(x_sp, geom.kernel, geom.stride, geom.pad,
+                            geom.out_hw)
 
 
 def spatialize(out: jnp.ndarray, geom: ConvGeometry) -> jnp.ndarray:

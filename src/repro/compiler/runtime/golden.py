@@ -11,8 +11,9 @@ The interpreter enforces the ISA contract along the way:
 
   * Fetch instructions must address the layer's DDR segments from the
     program's memory map (weights at ``L{i}.wgt.{core}``, activations
-    at the previous layer's output segment — or, for conv layers, at
-    the layer's own ``L{i}.col`` im2col staging segment);
+    at the producer's output segment — for conv layers the producer's
+    *spatial* NHWC segment named by ``geometry.src_offset``, since the
+    fused kernels im2col on chip and no staging copy exists);
   * every Execute must only consume weight tiles a prior Fetch brought
     on chip, and the tile count must cover the partition exactly;
   * Result instructions place output tiles by their DDR offset and must
@@ -51,11 +52,12 @@ class GoldenExecutor(ExecutorBackend):
         mem = self.program.memory
         wgt = mem[f"L{lp.index}.wgt.{core_name}"]
         if lp.geometry is not None:
-            # conv layers fetch the staged im2col copy of their input
-            act = mem[f"L{lp.index}.col"]
+            # conv layers fetch their producer's *spatial* NHWC segment
+            # (im2col happens inside the fused kernel — no staged copy)
+            src = lp.index - lp.geometry.src_offset
         else:
-            act = mem["act.in"] if lp.index == 0 \
-                else mem[f"L{lp.index - 1}.out"]
+            src = lp.index - 1
+        act = mem["act.in"] if src < 0 else mem[f"L{src}.out"]
         out = mem[f"L{lp.index}.out"]
         return wgt, act, out
 

@@ -2,33 +2,44 @@
 
 The golden interpreter loops a Python iteration per tile (plus a
 per-core scheduler validation), which makes large registry LM programs
-unusably slow to execute. This backend exploits that a layer
-partition's tile grid computes a plain GEMM: all tiles of a partition
-are grouped into a *single* ``kernels.bitserial_matmul`` /
-``kernels.int4_matmul`` call over the whole [m, k] x [k, n_part]
-extent.
+unusably slow to execute. This backend exploits that a layer's tile
+grids compute a plain split GEMM, and (by default) dispatches ONE
+fused kernel call per layer: ``kernels.fused_matmul`` consumes both
+sides of the Eq.-12 split — the first ``n_lut`` output columns
+bit-serially at the layer's LUT bit-width, the rest as packed int4 —
+accumulating into a single int32 [m, n] tile with per-column fp32
+dequant, so the per-layer concat and the second launch disappear. Conv
+layers go through ``kernels.fused_conv_matmul`` /
+``fused_depthwise_matmul``, which generate im2col patches *inside* the
+launch from the raw spatial NHWC block (no ``L{i}.col`` staging copy
+exists in compiled programs' DDR maps). ``fused=False`` restores the
+per-partition batched path (one ``bitserial_matmul`` / ``int4_matmul``
+call per core), which is also the fused path's reference in the
+benchmark regression guard.
 
-Bit-exactness: both kernels accumulate in exact int32 (bitplane or
-packed-int4 arithmetic) and apply per-column fp32 scales elementwise,
-so the batched product equals the golden interpreter's tile-by-tile
-assembly bit for bit — row/column tiling of an exact integer GEMM is
-associative, and the dequant scale is per output element. The
-pass-invariance suite (``tests/test_compiler_passes.py``) pins this.
+Bit-exactness: every path accumulates in exact int32 (bitplane or
+packed-int4 arithmetic) and applies per-column fp32 scales
+elementwise, so fused == per-partition == the golden interpreter's
+tile-by-tile assembly bit for bit — tiling/fusing an exact integer
+GEMM is associative, and the dequant scale is per output element. The
+pass-invariance suite and ``tests/test_fused_kernels.py`` pin this.
 
-On TPU the grouped calls dispatch the actual Pallas kernels
-(``kernels/bitserial_gemm.py`` / ``kernels/int4_gemm.py``); on CPU they
-fall back to the vectorized jnp oracles — still orders of magnitude
-faster than the interpreter's per-tile loop. ``mode`` is forwarded to
-the kernel wrappers ("auto" | "kernel" | "ref").
+On TPU the calls dispatch the actual Pallas kernels
+(``kernels/fused_hetero_gemm.py`` etc.); on CPU they fall back to the
+vectorized jnp oracles — still orders of magnitude faster than the
+interpreter's per-tile loop. ``mode`` is forwarded to the kernel
+wrappers ("auto" | "kernel" | "ref").
 
 Per-program JIT cache: every distinct ``(program fingerprint, mode)``
-gets one table of jitted per-partition callables, shared across
-executor instances (class-level LRU). The fingerprint hashes the
-encoded instruction words, which carry every GEMM extent — so it keys
-the sequence length too — and repeated executions of the same compiled
-program (serving hot paths, repeated ``--execute`` runs in one
-process, benchmark loops) reuse the traced executables instead of
-retracing layer by layer.
+gets one *complete* table of jitted callables (split and fused
+entries), built atomically under the cache lock at construction and
+never mutated afterwards — so concurrent executors can share a table
+without races. The table is shared across executor instances
+(class-level LRU whose capacity comes from the ``jit_cache_max``
+constructor argument or the ``REPRO_PALLAS_JIT_CACHE_MAX`` env var).
+Hits/misses are published to ``obs.metrics.METRICS`` as
+``pallas.jit_cache.*`` so ``launch/serve.py --metrics`` reports
+kernel-cache behavior alongside the program-image cache.
 
 Timing/contract checks are *off* by default here (that is the golden
 backend's job); pass ``check_timing=True`` to keep the per-core
@@ -38,6 +49,7 @@ path too.
 from __future__ import annotations
 
 import collections
+import os
 import threading
 
 import jax
@@ -45,8 +57,9 @@ import jax.numpy as jnp
 
 from repro.core import isa
 from repro.kernels import ops as kops
+from repro.obs.metrics import METRICS
 from repro.compiler.program import CoreProgram, LayerProgram
-from repro.compiler.runtime.base import ExecutorBackend
+from repro.compiler.runtime.base import ExecutionError, ExecutorBackend
 
 
 def _make_lut_fn(bits: int, mode: str):
@@ -76,41 +89,117 @@ def _make_dsp_dw_fn(mode: str):
     return jax.jit(f)
 
 
+def _make_fused_fn(bits: int, depthwise: bool, mode: str):
+    """One launch over the whole split: pre-staged [m, k] (dense) or
+    [m, k, n] (depthwise) activations, both weight partitions in."""
+    if depthwise:
+        def f(x_col, w_lut, s_lut, w_dsp, s_dsp):
+            return kops.fused_grouped_matmul(x_col, w_lut, s_lut, bits,
+                                             w_dsp, s_dsp, mode=mode)
+    else:
+        def f(x_q, w_lut, s_lut, w_dsp, s_dsp):
+            return kops.fused_matmul(x_q, w_lut, s_lut, bits,
+                                     w_dsp, s_dsp, mode=mode)
+    return jax.jit(f)
+
+
+def _make_fused_sp_fn(bits: int, geom, depthwise: bool, mode: str):
+    """One launch from the raw spatial NHWC block: im2col happens
+    inside the call (in-kernel on TPU, in-jit on CPU)."""
+    kk, st, p, oh = geom.kernel, geom.stride, geom.pad, geom.out_hw
+    if depthwise:
+        def f(x_sp, w_lut, s_lut, w_dsp, s_dsp):
+            return kops.fused_depthwise_matmul(x_sp, kk, st, p, oh,
+                                               w_lut, s_lut, bits,
+                                               w_dsp, s_dsp, mode=mode)
+    else:
+        def f(x_sp, w_lut, s_lut, w_dsp, s_dsp):
+            return kops.fused_conv_matmul(x_sp, kk, st, p, oh,
+                                          w_lut, s_lut, bits,
+                                          w_dsp, s_dsp, mode=mode)
+    return jax.jit(f)
+
+
 class PallasExecutor(ExecutorBackend):
-    """One batched (jitted, program-cached) kernel call per partition."""
+    """One fused (jitted, program-cached) kernel call per layer."""
 
     name = "pallas"
 
-    #: (program fingerprint, mode) -> {(core, bits): jitted fn}; LRU
+    #: (program fingerprint, mode) -> complete (frozen) fn table; LRU
     #: over programs, shared across instances so re-executing the same
     #: compiled program skips retracing.
     _jit_cache: "collections.OrderedDict[tuple, dict]" = \
         collections.OrderedDict()
-    _jit_cache_max = 16
+    _jit_cache_max = int(os.environ.get("REPRO_PALLAS_JIT_CACHE_MAX", "16"))
     _jit_cache_lock = threading.Lock()
     _cache_hits = 0
     _cache_misses = 0
 
     def __init__(self, program, check_timing: bool = False,
-                 mode: str = "auto", tracer=None):
+                 mode: str = "auto", tracer=None, fused: bool = True,
+                 jit_cache_max: int | None = None):
         super().__init__(program, check_timing=check_timing, tracer=tracer)
         self.mode = mode
+        self.fused = fused
+        if jit_cache_max is not None:
+            with PallasExecutor._jit_cache_lock:
+                PallasExecutor._jit_cache_max = int(jit_cache_max)
+                while len(PallasExecutor._jit_cache) > \
+                        PallasExecutor._jit_cache_max:
+                    PallasExecutor._jit_cache.popitem(last=False)
         self._fns = self._program_fns(program, mode)
 
     @classmethod
+    def _build_fns(cls, program, mode: str) -> dict:
+        """The complete jit table for one program: split entries (the
+        per-partition path) and fused entries (the one-launch-per-layer
+        path), keyed so layers sharing (core, bits[, geometry]) share a
+        traced executable."""
+        fns: dict = {}
+        for lp in program.layers:
+            dw = lp.depthwise
+            bits = lp.bits_w_lut
+            if lp.lut is not None:
+                key = ("lut-dw" if dw else "lut", bits)
+                if key not in fns:
+                    make = _make_lut_dw_fn if dw else _make_lut_fn
+                    fns[key] = make(bits, mode)
+            if lp.dsp is not None:
+                key = ("dsp-dw" if dw else "dsp", 4)
+                if key not in fns:
+                    make = _make_dsp_dw_fn if dw else _make_dsp_fn
+                    fns[key] = make(mode)
+            key = ("fused", bits, dw)
+            if key not in fns:
+                fns[key] = _make_fused_fn(bits, dw, mode)
+            if lp.geometry is not None:
+                key = ("fused-sp", bits, dw, lp.geometry)
+                if key not in fns:
+                    fns[key] = _make_fused_sp_fn(bits, lp.geometry, dw,
+                                                 mode)
+        return fns
+
+    @classmethod
     def _program_fns(cls, program, mode: str) -> dict:
+        """Shared-table lookup. The table is built *complete* before it
+        is published (and never mutated after), so readers outside the
+        lock can never observe a partially-populated dict — the race
+        the old lazy per-key insertion had."""
         key = (program.fingerprint(), mode)
         with cls._jit_cache_lock:
             fns = cls._jit_cache.get(key)
             if fns is not None:
                 cls._jit_cache.move_to_end(key)
                 cls._cache_hits += 1
+                METRICS.incr("pallas.jit_cache.hit")
                 return fns
             cls._cache_misses += 1
-            fns = {}
+            METRICS.incr("pallas.jit_cache.miss")
+            fns = cls._build_fns(program, mode)
             cls._jit_cache[key] = fns
             while len(cls._jit_cache) > cls._jit_cache_max:
                 cls._jit_cache.popitem(last=False)
+            METRICS.gauge("pallas.jit_cache.programs", len(cls._jit_cache))
             return fns
 
     @classmethod
@@ -127,22 +216,41 @@ class PallasExecutor(ExecutorBackend):
             cls._jit_cache.clear()
             cls._cache_hits = cls._cache_misses = 0
 
+    def run_layer(self, index: int, x_q) -> jnp.ndarray:
+        """One fused kernel call for the whole layer (both split
+        sides); falls back to the per-partition batched path
+        (``ExecutorBackend.run_layer``) when ``fused=False``."""
+        if not self.fused:
+            return super().run_layer(index, x_q)
+        lp = self.program.layers[index]
+        if index not in self._weights:
+            raise ExecutionError(f"layer {index} has no bound weights")
+        wts = self._weights[index]
+        for cp in (lp.lut, lp.dsp):
+            if cp is not None:
+                self._check_stream(lp, cp)
+        x_q = jnp.asarray(x_q, jnp.int8)
+        geom = lp.geometry
+        if geom is not None and x_q.shape == geom.in_shape:
+            # spatial input: im2col happens inside the fused call
+            fn = self._fns[("fused-sp", lp.bits_w_lut, lp.depthwise, geom)]
+        else:
+            x_q = self._staged_activations(lp, x_q)
+            fn = self._fns[("fused", lp.bits_w_lut, lp.depthwise)]
+        with self.tracer.measure(f"exec.{self.name}.fused", lp.name,
+                                 layer=lp.index, n=lp.dims.n,
+                                 n_lut=lp.n_lut):
+            return fn(x_q, wts.w_lut, wts.s_lut, wts.w_dsp, wts.s_dsp)
+
     def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
                   w_codes, w_scales) -> jnp.ndarray:
-        # depthwise partitions batch the whole grouped (per-channel
-        # im2col) contraction in one call, like dense partitions batch
-        # their tile grid into one GEMM
+        # the per-partition path (fused=False): depthwise partitions
+        # batch the whole grouped contraction in one call, like dense
+        # partitions batch their tile grid into one GEMM. Tables are
+        # complete at construction — read-only here (thread-safe).
         dw = lp.depthwise
         if cp.core == isa.CoreSel.LUT:
-            key = ("lut-dw" if dw else "lut", lp.bits_w_lut)
-            fn = self._fns.get(key)
-            if fn is None:
-                make = _make_lut_dw_fn if dw else _make_lut_fn
-                fn = self._fns[key] = make(lp.bits_w_lut, self.mode)
+            fn = self._fns[("lut-dw" if dw else "lut", lp.bits_w_lut)]
         else:
-            key = ("dsp-dw" if dw else "dsp", 4)
-            fn = self._fns.get(key)
-            if fn is None:
-                make = _make_dsp_dw_fn if dw else _make_dsp_fn
-                fn = self._fns[key] = make(self.mode)
+            fn = self._fns[("dsp-dw" if dw else "dsp", 4)]
         return fn(x_q, w_codes, w_scales)

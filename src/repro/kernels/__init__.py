@@ -2,28 +2,38 @@
 
   bitserial_gemm — bitplane GEMM (the LUT-core adaptation; latency ∝ bits)
   int4_gemm      — packed-int4 GEMM (the DSP-core adaptation; fixed latency)
+  fused_hetero_gemm — both sides of the Eq.-12 split in ONE launch
+                     (dense + im2col-free conv variants)
   flash_attention — online-softmax attention for serving hot paths
 
 Each kernel has a pure-jnp oracle in ``ref.py`` and is validated against
 it in interpret mode by the test suite. ``ops.py`` holds the public
-wrappers (padding, backend dispatch, GQA broadcast).
+wrappers (padding, backend dispatch, split-side normalization, GQA
+broadcast).
 """
 from repro.kernels.ops import (
     attention,
     bitserial_matmul,
+    fused_conv_matmul,
+    fused_depthwise_matmul,
+    fused_grouped_matmul,
+    fused_matmul,
     hetero_matmul,
     int4_matmul,
 )
 from repro.kernels.ref import (
     bitplane_decompose,
     bitplane_reconstruct,
+    conv_patches_ref,
     pack_int4,
     plane_scales,
     unpack_int4,
 )
 
 __all__ = [
-    "attention", "bitserial_matmul", "hetero_matmul", "int4_matmul",
-    "bitplane_decompose", "bitplane_reconstruct", "pack_int4",
-    "plane_scales", "unpack_int4",
+    "attention", "bitserial_matmul", "fused_conv_matmul",
+    "fused_depthwise_matmul", "fused_grouped_matmul", "fused_matmul",
+    "hetero_matmul", "int4_matmul",
+    "bitplane_decompose", "bitplane_reconstruct", "conv_patches_ref",
+    "pack_int4", "plane_scales", "unpack_int4",
 ]

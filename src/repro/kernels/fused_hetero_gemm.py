@@ -1,0 +1,290 @@
+"""Fused split-aware whole-layer Pallas kernels.
+
+The N3H-Core split (Eq. 12) makes a layer's GEMM *one* heterogeneous
+computation: the first ``n_lut`` output columns run on the LUT core
+(bit-serial, latency ∝ weight bits), the rest on the DSP core
+(packed-int4, fixed latency). The batched executor used to mirror that
+as two kernel launches plus a host-side concat per layer; these kernels
+consume both sides of the split in a *single* launch.
+
+``fused_hetero_gemm`` — one grid whose column-block axis spans the
+LUT-region blocks followed by the DSP-region blocks. Per column block
+the kernel picks its path with ``pl.when`` on the block index: LUT
+blocks accumulate the bitplane decomposition (one int8 MXU matmul per
+plane, shifted partial sums — exactly ``bitserial_gemm``'s scheme), DSP
+blocks unpack two-int4-per-byte weights in-register and issue one int8
+matmul (``int4_gemm``'s scheme). Both paths share one int32 VMEM
+accumulator per output tile and one fp32 per-column dequant epilogue,
+so the per-layer concat disappears: the output lands as a single
+[M, N] tile in split column order.
+
+``fused_conv_gemm`` — the im2col-free conv variant: the kernel reads
+the raw zero-padded NHWC activation block and generates im2col patches
+*inside* the launch, contracting tap by tap ((kh, kw) static unroll;
+each tap is a [M, C] x [C, bn] matmul against the matching weight
+rows). No column matrix is ever materialized — not in DDR (the
+``L{i}.col`` staging copy is gone from compiled programs) and not in
+VMEM. The whole spatial input must fit on chip; the ``ops.py`` wrapper
+falls back to the vectorized jnp path when it does not (see
+``fused_conv_vmem_bytes``).
+
+Both kernels are validated in interpret mode against the pure-jnp
+oracles (``ref.fused_hetero_gemm_ref``); on CPU the wrappers dispatch
+the oracles directly, still as one jitted call per layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _plane_weights(bits: int) -> list[int]:
+    """Python-int two's-complement plane weights (jnp constants cannot
+    be captured in-kernel)."""
+    return [2 ** b for b in range(bits - 1)] + [-(2 ** (bits - 1))]
+
+
+def _unpack_int4_block(p: jax.Array) -> jax.Array:
+    """[bk, bn//2] int8 packed -> [bk, bn] int8 (sign-extended nibbles)."""
+    lo = jnp.left_shift(p, 4) >> 4          # arithmetic shift sign-extends
+    hi = p >> 4
+    out = jnp.stack([lo, hi], axis=-1)      # [bk, bn//2, 2]
+    return out.reshape(p.shape[0], p.shape[1] * 2)
+
+
+# ---------------------------------------------------------------------------
+# Dense fused kernel: [M, K] x (LUT planes | packed int4) -> [M, N]
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(x_ref, planes_ref, packed_ref, scale_ref, out_ref,
+                  acc_ref, *, bits: int, nk: int, nn_lut: int):
+    """One (m, col, k) grid step. Column blocks j < nn_lut take the
+    bitplane path; blocks j >= nn_lut take the packed-int4 path. Both
+    land in the same int32 accumulator and fp32 dequant epilogue."""
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                   # [bm, bk] int8
+
+    @pl.when(j < nn_lut)
+    def _lut():
+        s = _plane_weights(bits)
+        acc = acc_ref[...]
+        for b in range(bits):                        # static unroll: planes
+            part = jax.lax.dot(x, planes_ref[b],
+                               preferred_element_type=jnp.int32)
+            acc = acc + s[b] * part
+        acc_ref[...] = acc
+
+    @pl.when(j >= nn_lut)
+    def _dsp():
+        w = _unpack_int4_block(packed_ref[...])      # [bk, bn] int8
+        acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(jnp.float32) \
+            * scale_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_lut_blocks", "bm",
+                                             "bn", "bk", "interpret"))
+def fused_hetero_gemm(x: jax.Array, planes: jax.Array, packed: jax.Array,
+                      w_scale: jax.Array, bits: int, n_lut_blocks: int, *,
+                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK,
+                      interpret: bool = False) -> jax.Array:
+    """Single-launch split GEMM over pre-padded operands.
+
+    x: [M, K] int8; planes: [bits, K, N_lut] int8 {0, 1} plane stack of
+    the LUT columns; packed: [K, N_dsp//2] int8 ``ref.pack_int4`` bytes
+    of the DSP columns; w_scale: [N_lut + N_dsp] fp32. N_lut must be
+    ``n_lut_blocks * bn``; every extent must divide by its block (pad at
+    the ops.py layer). Returns fp32 [M, N_lut + N_dsp] in split column
+    order.
+    """
+    m, k = x.shape
+    _, _, n_lut = planes.shape
+    n_dsp = packed.shape[1] * 2
+    n = n_lut + n_dsp
+    if planes.shape[0] != bits:
+        raise ValueError(
+            f"planes leading dim {planes.shape[0]} != bits {bits}")
+    if n_lut != n_lut_blocks * bn:
+        raise ValueError(f"LUT columns {n_lut} != n_lut_blocks*bn "
+                         f"({n_lut_blocks}x{bn})")
+    if m % bm or k % bk or n_dsp % bn:
+        raise ValueError(f"shape ({m},{k},{n_lut}+{n_dsp}) not divisible "
+                         f"by blocks ({bm},{bk},{bn}); pad first")
+    nm, nn, nk = m // bm, n // bn, k // bk
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    nl = n_lut_blocks
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, bits=bits, nk=nk, nn_lut=nl),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # clamp each region's block index so the other region's
+            # blocks read a valid (ignored) block instead of OOB
+            pl.BlockSpec((bits, bk, bn),
+                         lambda i, j, kk: (0, kk, jnp.minimum(j, nl - 1)
+                                           if nl else 0)),
+            pl.BlockSpec((bk, bn // 2),
+                         lambda i, j, kk: (kk, jnp.maximum(j - nl, 0))),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, planes, packed, w_scale)
+
+
+# ---------------------------------------------------------------------------
+# Conv fused kernel: in-kernel im2col from the NHWC activation block
+# ---------------------------------------------------------------------------
+
+
+def fused_conv_vmem_bytes(in_hw: int, c_in: int, kernel: int, pad: int,
+                          m: int, k: int, bits: int,
+                          bn: int = DEFAULT_BN) -> int:
+    """Rough VMEM working set of one ``fused_conv_gemm`` grid step: the
+    padded spatial block, the per-column-block weight stack (planes are
+    the worst case), the int32 accumulator and the fp32 output tile.
+    The ops.py wrapper falls back to the vectorized jnp path when this
+    exceeds the budget."""
+    hp = in_hw + 2 * pad
+    x_bytes = hp * hp * c_in
+    w_bytes = max(bits, 1) * k * bn
+    acc_bytes = 2 * m * bn * 4
+    return x_bytes + w_bytes + acc_bytes
+
+
+def _fused_conv_kernel(x_ref, planes_ref, packed_ref, scale_ref, out_ref, *,
+                       bits: int, nn_lut: int, kernel: int, stride: int,
+                       out_hw: int, c_in: int, m_pad: int):
+    """One column-block grid step: generate im2col patches in-kernel
+    (tap-by-tap static unroll over the (kh, kw) window) and contract
+    them against this block's weight rows — LUT blocks through the
+    bitplane path, DSP blocks through packed int4."""
+    j = pl.program_id(0)
+    x = x_ref[...]                           # [H+2p, W+2p, C] int8
+    m = out_hw * out_hw
+    span = stride * (out_hw - 1) + 1
+
+    def taps():
+        for t, (dh, dw) in enumerate(
+                (a, b) for a in range(kernel) for b in range(kernel)):
+            xt = jax.lax.slice(x, (dh, dw, 0),
+                               (dh + span, dw + span, c_in),
+                               (stride, stride, 1))  # [oh, oh, C]
+            xt = xt.reshape(m, c_in)
+            if m_pad != m:
+                xt = jnp.pad(xt, ((0, m_pad - m), (0, 0)))
+            yield t, xt
+
+    @pl.when(j < nn_lut)
+    def _lut():
+        s = _plane_weights(bits)
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for t, xt in taps():
+            rows = slice(t * c_in, (t + 1) * c_in)
+            for b in range(bits):
+                part = jax.lax.dot(xt, planes_ref[b, rows],
+                                   preferred_element_type=jnp.int32)
+                acc = acc + s[b] * part
+        out_ref[...] = acc.astype(jnp.float32) * scale_ref[...][None, :]
+
+    @pl.when(j >= nn_lut)
+    def _dsp():
+        acc = jnp.zeros(out_ref.shape, jnp.int32)
+        for t, xt in taps():
+            w = _unpack_int4_block(
+                packed_ref[t * c_in:(t + 1) * c_in, :])
+            acc = acc + jax.lax.dot(xt, w,
+                                    preferred_element_type=jnp.int32)
+        out_ref[...] = acc.astype(jnp.float32) * scale_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "n_lut_blocks", "n_dsp_blocks", "kernel", "stride", "out_hw",
+    "bn", "bm", "interpret"))
+def fused_conv_gemm(x_sp: jax.Array, planes: jax.Array, packed: jax.Array,
+                    w_scale: jax.Array, bits: int, n_lut_blocks: int,
+                    n_dsp_blocks: int, kernel: int, stride: int,
+                    out_hw: int, *, bm: int = 8, bn: int = DEFAULT_BN,
+                    interpret: bool = False) -> jax.Array:
+    """Single-launch im2col-free conv GEMM.
+
+    x_sp: [H+2p, W+2p, C] int8 — the *already zero-padded* spatial
+    activation block (code 0 is real 0.0 under the symmetric
+    quantizer); planes: [bits, kernel**2*C, >=bn] LUT plane stack in
+    (kh, kw, c) row order (the HWIO flattening); packed:
+    [kernel**2*C, >=bn//2] int4-pair bytes; w_scale:
+    [(n_lut_blocks + n_dsp_blocks) * bn] fp32 in split region order.
+    The grid covers ``n_lut_blocks`` LUT column blocks then
+    ``n_dsp_blocks`` DSP blocks; a region with zero blocks still needs
+    one (dummy, never-consumed) weight block so its BlockSpec stays
+    in-bounds. The m extent is padded to ``bm`` sublanes in-kernel.
+    Returns fp32 [out_hw**2, N] in split column order.
+    """
+    c_in = x_sp.shape[2]
+    nn = n_lut_blocks + n_dsp_blocks
+    n = nn * bn
+    if nn == 0:
+        raise ValueError("grid needs at least one column block")
+    k = kernel * kernel * c_in
+    if planes.shape[2] < bn or packed.shape[1] < bn // 2:
+        raise ValueError("each region needs at least one weight block "
+                         "(use a dummy when the region is empty)")
+    if w_scale.shape[0] < n:
+        raise ValueError(f"scales {w_scale.shape[0]} < grid columns {n}")
+    m = out_hw * out_hw
+    m_pad = (m + bm - 1) // bm * bm
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",))
+
+    nl = n_lut_blocks
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_conv_kernel, bits=bits, nn_lut=nl, kernel=kernel,
+            stride=stride, out_hw=out_hw, c_in=c_in, m_pad=m_pad),
+        grid=(nn,),
+        in_specs=[
+            pl.BlockSpec(x_sp.shape, lambda j: (0, 0, 0)),
+            pl.BlockSpec((max(bits, 1), k, bn),
+                         lambda j: (0, 0, jnp.minimum(j, nl - 1)
+                                    if nl else 0)),
+            pl.BlockSpec((k, bn // 2),
+                         lambda j: (0, jnp.maximum(j - nl, 0))),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m_pad, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(x_sp, planes, packed, w_scale)
+    return out[:m]

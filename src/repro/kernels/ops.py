@@ -19,6 +19,16 @@ from repro.kernels import ref
 from repro.kernels.bitserial_gemm import bitserial_gemm as _bitserial_kernel
 from repro.kernels.int4_gemm import int4_gemm as _int4_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.fused_hetero_gemm import (
+    fused_conv_gemm as _fused_conv_kernel,
+    fused_conv_vmem_bytes,
+    fused_hetero_gemm as _fused_kernel,
+)
+
+#: VMEM working-set ceiling (bytes) above which the fused conv kernel
+#: falls back to the vectorized jnp path (whole spatial input must fit
+#: on chip for in-kernel im2col).
+FUSED_CONV_VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def _on_tpu() -> bool:
@@ -128,6 +138,151 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = _flash_kernel(qp, kp, vp, causal=causal, kv_offset=kv_offset,
                         bq=bq, bkv=bkv, interpret=not _on_tpu())
     return out[:, :, :sq]
+
+
+def _norm_side(w_q: jax.Array | None, w_scale: jax.Array | None
+               ) -> tuple[jax.Array | None, jax.Array | None]:
+    """An absent split side may arrive as None or as a 0-column array."""
+    if w_q is None or w_q.shape[-1] == 0:
+        return None, None
+    return w_q, w_scale
+
+
+def fused_matmul(x_q: jax.Array, w_lut: jax.Array | None,
+                 s_lut: jax.Array | None, bits: int,
+                 w_dsp: jax.Array | None, s_dsp: jax.Array | None, *,
+                 block: tuple[int, int, int] = (128, 128, 128),
+                 mode: str = "auto") -> jax.Array:
+    """Fused split GEMM — both sides of the Eq.-12 split in ONE launch.
+
+    x_q: [M, K] int8; w_lut: [K, n_lut] codes within ``bits`` bits (the
+    LUT partition; None or 0 columns when absent); w_dsp: [K, n_dsp]
+    int32 codes in [-8, 7]; s_*: per-column fp32 scales. Returns fp32
+    [M, n_lut + n_dsp] in split column order, bit-identical to
+    :func:`hetero_matmul`. A one-sided split still takes a single
+    launch through the matching single-path kernel.
+    """
+    w_lut, s_lut = _norm_side(w_lut, s_lut)
+    w_dsp, s_dsp = _norm_side(w_dsp, s_dsp)
+    if w_lut is None and w_dsp is None:
+        raise ValueError("fused_matmul: both split sides are empty")
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.fused_hetero_gemm_ref(x_q, w_lut, s_lut, bits,
+                                         w_dsp, s_dsp)
+    if w_lut is None:
+        return int4_matmul(x_q, w_dsp, s_dsp, block=block, mode=mode)
+    if w_dsp is None:
+        return bitserial_matmul(x_q, w_lut, s_lut, bits, block=block,
+                                mode=mode)
+    bm, bk, bn = block
+    m, _ = x_q.shape
+    n_lut, n_dsp = w_lut.shape[1], w_dsp.shape[1]
+    planes = ref.bitplane_decompose(w_lut, bits)
+    pp = _pad_to(_pad_to(planes, 1, bk), 2, bn)
+    packed = ref.pack_int4(_pad_to(w_dsp, 1, 2))
+    wp = _pad_to(_pad_to(packed, 0, bk), 1, bn // 2)
+    n_lut_pad = pp.shape[2]
+    sp = jnp.concatenate([_pad_to(s_lut, 0, bn),
+                          _pad_to(_pad_to(s_dsp, 0, 2), 0, bn)])
+    xp = _pad_to(_pad_to(x_q, 0, bm), 1, bk)
+    out = _fused_kernel(xp, pp, wp, sp, bits, n_lut_pad // bn,
+                        bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())
+    if n_lut_pad == n_lut:
+        return out[:m, :n_lut + n_dsp]
+    # column padding landed between the regions; splice it out
+    return jnp.concatenate(
+        [out[:m, :n_lut], out[:m, n_lut_pad:n_lut_pad + n_dsp]], axis=1)
+
+
+def fused_conv_matmul(x_sp: jax.Array, kernel: int, stride: int, pad: int,
+                      out_hw: int, w_lut: jax.Array | None,
+                      s_lut: jax.Array | None, bits: int,
+                      w_dsp: jax.Array | None, s_dsp: jax.Array | None, *,
+                      block: tuple[int, int, int] = (128, 128, 128),
+                      mode: str = "auto",
+                      vmem_budget: int | None = None) -> jax.Array:
+    """Fused im2col-free conv GEMM: one launch from the raw spatial
+    activation block — patches are generated inside the kernel, so no
+    column matrix is staged in DDR or materialized on host.
+
+    x_sp: [H, W, C] int8 spatial activations (*unpadded*; zero padding
+    happens here); weights/scales as :func:`fused_matmul` with K =
+    ``kernel**2 * C`` rows in (kh, kw, c) order. Falls back to the
+    vectorized jnp path (still a single fused jit call) when the
+    spatial working set exceeds ``vmem_budget``.
+    """
+    w_lut, s_lut = _norm_side(w_lut, s_lut)
+    w_dsp, s_dsp = _norm_side(w_dsp, s_dsp)
+    if w_lut is None and w_dsp is None:
+        raise ValueError("fused_conv_matmul: both split sides are empty")
+    m = out_hw * out_hw
+    k = kernel * kernel * x_sp.shape[2]
+    budget = FUSED_CONV_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    fits = fused_conv_vmem_bytes(x_sp.shape[0], x_sp.shape[2], kernel, pad,
+                                 m, k, bits) <= budget
+    if mode == "ref" or (mode == "auto" and not _on_tpu()) or not fits:
+        x_col = ref.conv_patches_ref(x_sp, kernel, stride, pad, out_hw)
+        return ref.fused_hetero_gemm_ref(x_col.reshape(m, k), w_lut, s_lut,
+                                         bits, w_dsp, s_dsp)
+    _, _, bn = block
+    xp = jnp.pad(x_sp, ((pad, pad), (pad, pad), (0, 0)))
+    n_lut = 0 if w_lut is None else w_lut.shape[1]
+    n_dsp = 0 if w_dsp is None else w_dsp.shape[1]
+    if w_lut is None:      # dummy never-consumed block keeps specs in-bounds
+        planes = jnp.zeros((max(bits, 1), k, bn), jnp.int8)
+        n_lut_pad, s_l = 0, None
+    else:
+        planes = _pad_to(ref.bitplane_decompose(w_lut, bits), 2, bn)
+        n_lut_pad = planes.shape[2]
+        s_l = _pad_to(s_lut, 0, bn)
+    if w_dsp is None:
+        packed = jnp.zeros((k, bn // 2), jnp.int8)
+        n_dsp_pad, s_d = 0, None
+    else:
+        packed = _pad_to(ref.pack_int4(_pad_to(w_dsp, 1, 2)), 1, bn // 2)
+        n_dsp_pad = packed.shape[1] * 2
+        s_d = _pad_to(_pad_to(s_dsp, 0, 2), 0, bn)
+    sp = jnp.concatenate([s for s in (s_l, s_d) if s is not None])
+    out = _fused_conv_kernel(xp, planes, packed, sp, bits,
+                             n_lut_pad // bn, n_dsp_pad // bn, kernel,
+                             stride, out_hw, bn=bn,
+                             interpret=not _on_tpu())
+    if n_lut_pad == n_lut:
+        return out[:, :n_lut + n_dsp]
+    return jnp.concatenate(
+        [out[:, :n_lut], out[:, n_lut_pad:n_lut_pad + n_dsp]], axis=1)
+
+
+def fused_grouped_matmul(x_col: jax.Array, w_lut: jax.Array | None,
+                         s_lut: jax.Array | None, bits: int,
+                         w_dsp: jax.Array | None, s_dsp: jax.Array | None,
+                         *, mode: str = "auto") -> jax.Array:
+    """Fused depthwise split GEMM over per-channel im2col slices.
+
+    x_col: [M, K, N] over *all* N output channels in split order; the
+    first n_lut channels contract bit-serially, the rest as int4. Like
+    the single-path grouped ops, the vectorized jnp contraction is the
+    kernel on every backend (K = kh*kw taps is far below the MXU tile).
+    """
+    del mode
+    w_lut, s_lut = _norm_side(w_lut, s_lut)
+    w_dsp, s_dsp = _norm_side(w_dsp, s_dsp)
+    return ref.fused_hetero_grouped_gemm_ref(x_col, w_lut, s_lut, bits,
+                                             w_dsp, s_dsp)
+
+
+def fused_depthwise_matmul(x_sp: jax.Array, kernel: int, stride: int,
+                           pad: int, out_hw: int, w_lut: jax.Array | None,
+                           s_lut: jax.Array | None, bits: int,
+                           w_dsp: jax.Array | None,
+                           s_dsp: jax.Array | None, *,
+                           mode: str = "auto") -> jax.Array:
+    """Fused depthwise conv from the raw spatial block: in-jit patch
+    generation (no staged column matrix) feeding the fused grouped
+    contraction."""
+    x_col = ref.conv_patches_ref(x_sp, kernel, stride, pad, out_hw)
+    return fused_grouped_matmul(x_col, w_lut, s_lut, bits, w_dsp, s_dsp,
+                                mode=mode)
 
 
 def hetero_matmul(x_q: jax.Array, w_q_serial: jax.Array, s_serial: jax.Array,

@@ -135,6 +135,84 @@ def int4_gemm_ref(x: jax.Array, w_packed: jax.Array, w_scale: jax.Array
     return acc.astype(jnp.float32) * w_scale[None, :]
 
 
+def conv_patches_ref(x_sp: jax.Array, kernel: int, stride: int, pad: int,
+                     out_hw: int) -> jax.Array:
+    """Im2col patch generation from a spatial [H, W, C] tensor:
+    returns [out_hw*out_hw, kernel*kernel, C] (output positions
+    row-major, taps in (kh, kw) order). Zero padding — code 0 is real
+    0.0 under the symmetric quantizer.
+
+    The single source for the patch layout: the executors' staging
+    helper and the fused conv kernels' oracles both delegate here, so
+    the (kh, kw, c) column order matches the HWIO weight flattening
+    ``w.reshape(k, n)`` everywhere.
+    """
+    x = jnp.pad(x_sp, ((pad, pad), (pad, pad), (0, 0)))
+    span = stride * (out_hw - 1) + 1
+    taps = [x[dh:dh + span:stride, dw:dw + span:stride, :]
+            for dh in range(kernel) for dw in range(kernel)]
+    pat = jnp.stack(taps, axis=2)              # [oh, oh, kk*kk, C]
+    return pat.reshape(out_hw * out_hw, kernel * kernel, x_sp.shape[2])
+
+
+def fused_hetero_gemm_ref(x: jax.Array, w_lut: jax.Array | None,
+                          s_lut: jax.Array | None, bits: int,
+                          w_dsp: jax.Array | None,
+                          s_dsp: jax.Array | None) -> jax.Array:
+    """Fused split-GEMM oracle: one int32 accumulation pass over both
+    sides of the Eq.-12 split, one per-column dequant.
+
+    x: [M, K] int8; w_lut: [K, n_lut] codes within ``bits`` bits (or
+    None); w_dsp: [K, n_dsp] int32 codes in [-8, 7] (or None); s_*:
+    per-column fp32 scales. Returns fp32 [M, n_lut + n_dsp] in split
+    column order — bit-identical to ``hetero_gemm_ref`` (both paths
+    accumulate exactly in int32; the fp32 dequant is per output
+    element, so fusing the concat cannot change a single bit).
+    """
+    accs, scales = [], []
+    if w_lut is not None and w_lut.shape[1]:
+        planes = bitplane_decompose(w_lut, bits)
+        s = plane_scales(bits)
+        acc = jnp.zeros((x.shape[0], w_lut.shape[1]), jnp.int32)
+        for b in range(bits):
+            part = jax.lax.dot(x.astype(jnp.int8), planes[b],
+                               preferred_element_type=jnp.int32)
+            acc = acc + s[b] * part
+        accs.append(acc)
+        scales.append(s_lut)
+    if w_dsp is not None and w_dsp.shape[1]:
+        accs.append(jax.lax.dot(x.astype(jnp.int8),
+                                jnp.asarray(w_dsp, jnp.int8),
+                                preferred_element_type=jnp.int32))
+        scales.append(s_dsp)
+    acc = accs[0] if len(accs) == 1 else jnp.concatenate(accs, axis=1)
+    sc = scales[0] if len(scales) == 1 else jnp.concatenate(scales)
+    return acc.astype(jnp.float32) * sc[None, :]
+
+
+def fused_hetero_grouped_gemm_ref(x_col: jax.Array,
+                                  w_lut: jax.Array | None,
+                                  s_lut: jax.Array | None, bits: int,
+                                  w_dsp: jax.Array | None,
+                                  s_dsp: jax.Array | None) -> jax.Array:
+    """Fused grouped (depthwise) split-GEMM oracle.
+
+    x_col: [M, K, N] int8 per-channel im2col slices over *all* N
+    channels in split order — the first n_lut channels contract
+    bit-serially, the rest through the int4 path. Bit-identical to the
+    two grouped oracles run per partition and concatenated.
+    """
+    outs = []
+    n_lut = 0 if w_lut is None else w_lut.shape[1]
+    if n_lut:
+        outs.append(bitserial_grouped_gemm_ref(
+            x_col[:, :, :n_lut], w_lut, s_lut, bits))
+    if w_dsp is not None and w_dsp.shape[1]:
+        outs.append(int4_grouped_gemm_ref(
+            x_col[:, :, n_lut:], w_dsp, s_dsp))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True, scale: float | None = None,
                         kv_offset: int = 0) -> jax.Array:

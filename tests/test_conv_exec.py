@@ -12,8 +12,9 @@ The contract under test (ISSUE 4 acceptance surface):
   * -O0 vs -O1 invariance on depthwise programs (passes change timing,
     never semantics);
   * programs carry their ConvGeometry bit-exactly through text assembly
-    and the ``N3HPROG1`` binary image, and the memory map stages im2col
-    copies in per-layer ``L{i}.col`` segments;
+    and the ``N3HPROG1`` binary image, and the memory map wires conv
+    act fetches straight to the producer's spatial segment (no
+    ``L{i}.col`` staging — the fused kernels im2col on chip);
   * multi-device bundles of CNNs (filter shards of depthwise layers,
     pipeline stages) stay bit-exact vs the single-device program.
 """
@@ -220,7 +221,11 @@ def test_geometry_round_trips_text_and_binary():
         assert a.geometry == b.geometry
 
 
-def test_memory_map_stages_im2col_segments():
+def test_memory_map_has_no_col_staging_segments():
+    """Fused-kernel DDR map: conv layers read their producer's spatial
+    NHWC segment directly (im2col happens inside the kernel) — no
+    ``L{i}.col`` staging copy exists, and the act fetches address the
+    ``src_offset`` producer's output (or ``act.in``)."""
     layers = _cnn_layers("resnet18")
     prog = lower_network("r", layers, LUT, DSP, XC7Z020)
     mem = prog.memory
@@ -228,11 +233,11 @@ def test_memory_map_stages_im2col_segments():
     # program input is the spatial image, not its im2col expansion
     assert mem["act.in"].size == \
         (g0.in_hw * g0.in_hw * g0.c_in * 4 + 7) // 8
-    for lp in prog.layers:
-        seg = mem[f"L{lp.index}.col"]
-        cols = lp.dims.m * lp.dims.k * (lp.dims.n if lp.depthwise else 1)
-        assert seg.size == (cols * lp.bits_a + 7) // 8
-        # the act fetches address the staged copy
+    assert not any(".col" in seg.name for seg in mem.segments)
+    for pos, lp in enumerate(prog.layers):
+        src = pos - lp.geometry.src_offset
+        seg = mem["act.in"] if src < 0 else mem[f"L{src}.out"]
+        # the act fetches address the producer's spatial segment
         for cp in lp.cores():
             from repro.core import isa
             bases = {op.instr.ddr_base for op in cp.streams["fetch"]
