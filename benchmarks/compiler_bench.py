@@ -389,6 +389,119 @@ def bench_dse_sim_gap(smoke: bool = False) -> list[tuple[str, float, str]]:
     return rows
 
 
+def bench_gather_overlap(smoke: bool = False) -> tuple[str, float, str]:
+    """``compiler.gather_overlap`` row: filter-mode gather DMAs issued
+    at the *producing* layer's fetch tail (riding under its compute)
+    vs serialized at the consuming layer's head — the simulated
+    filter-parallel makespan delta on a registry LM under a 2-device
+    plan. Hard guard: the overlapped placement must not be slower."""
+    from repro.compiler import derive_plan, lower_partitioned
+    from repro.compiler.networks import network_layers
+    from repro.core.scheduler import (DspCoreConfig, LutCoreConfig,
+                                      XC7Z020)
+    t0 = time.time()
+    seq = 16 if smoke else 64
+    layers = network_layers(EXEC_NETWORK, seq_len=seq)
+    lut = LutCoreConfig(m=8, n=16, k=128)
+    dsp = DspCoreConfig(
+        n_reg_row_a=DspCoreConfig.rows_for_device(XC7Z020))
+    plan = derive_plan(layers, 2, kind="filter")
+    kw = dict(bits_w_lut=4, bits_a=4, opt_level=1)
+    over = lower_partitioned(EXEC_NETWORK, layers, plan, lut, dsp,
+                             XC7Z020, **kw)
+    serial = lower_partitioned(EXEC_NETWORK, layers, plan, lut, dsp,
+                               XC7Z020, gather_overlap=False, **kw)
+    c_over = simulate_program(over).latency_cycles
+    c_serial = simulate_program(serial).latency_cycles
+    assert c_over < c_serial, \
+        (f"filter gather overlap regressed: {c_over} cycles vs "
+         f"{c_serial} serialized on {EXEC_NETWORK}")
+    bench = {
+        "BENCH": "compiler.gather_overlap",
+        "network": EXEC_NETWORK,
+        "seq_len": seq,
+        "devices": 2,
+        "latency_overlap": c_over,
+        "latency_serialized": c_serial,
+        "gain_pct": round(100.0 * (c_serial - c_over)
+                          / max(c_serial, 1), 3),
+    }
+    return (f"compiler.gather_overlap.{EXEC_NETWORK}",
+            1e6 * (time.time() - t0), json.dumps(bench, sort_keys=True))
+
+
+def bench_serve_decode(smoke: bool = False) -> list[tuple[str, float, str]]:
+    """``serve.decode.*`` rows: decode-resident step programs vs
+    naively re-running the whole fixed-sequence program per generated
+    token.
+
+    Per network: the simulator's warm-up vs steady-state cycles/token
+    (``DecodeSim`` — weight fetches elided after warm-up, KV/state
+    segments persistent), the fixed-seq full re-invocation baseline,
+    and host tokens/sec through a live ``ExecutorSession`` on the
+    pallas backend (bind once, then ``step(token, pos)`` against the
+    resident image). Hard regression guards: the resident steady-state
+    step must beat both the naive per-token re-run and its own warm-up
+    invocation.
+    """
+    from repro.compiler import compile_decode_network
+    from repro.compiler.runtime import ExecutorSession
+
+    max_seq = 8 if smoke else 16
+    n_tokens = 4 if smoke else 8
+    rows = []
+    for net in ("llama3.2-1b", "mamba2-780m"):
+        t0 = time.time()
+        prog = compile_decode_network(net, batch=1, max_seq=max_seq,
+                                      opt_level=1)
+        ds = simulate_program(prog)
+        fixed = compile_network(net, seq_len=max_seq, opt_level=1)
+        naive = simulate_program(fixed).total_cycles
+        assert ds.steady_cycles < naive, \
+            (f"resident decode step ({ds.steady_cycles} cycles) not "
+             f"faster than re-running the fixed-seq program per token "
+             f"({naive} cycles) on {net}")
+        assert ds.steady_cycles < ds.warmup_cycles, \
+            (f"steady-state step ({ds.steady_cycles} cycles) not "
+             f"faster than warm-up ({ds.warmup_cycles}) on {net}")
+
+        session = ExecutorSession(prog, backend="pallas")
+        session.bind_synthetic_all(seed=0)
+        tok = np.array([1], np.int32)
+        t1 = time.perf_counter()
+        logits = session.step(tok, 0)          # warm-up invocation
+        warm_s = time.perf_counter() - t1
+        t1 = time.perf_counter()
+        for i in range(1, n_tokens):
+            tok = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            logits = session.step(tok, i)
+        steady_s = time.perf_counter() - t1
+        bench = {
+            "BENCH": "serve.decode",
+            "network": net,
+            "family": prog.step.family,
+            "batch": 1,
+            "max_seq": max_seq,
+            "tokens": n_tokens,
+            "warmup_cycles": ds.warmup_cycles,
+            "steady_cycles": ds.steady_cycles,
+            "naive_fixed_seq_cycles_per_token": naive,
+            "resident_vs_naive_x": round(naive
+                                         / max(ds.steady_cycles, 1), 2),
+            "warmup_vs_steady_x": round(ds.warmup_cycles
+                                        / max(ds.steady_cycles, 1), 3),
+            "tokens_cycles": ds.tokens_cycles(n_tokens),
+            "warmup_s": round(warm_s, 4),
+            "steady_s_per_token": round(steady_s
+                                        / max(n_tokens - 1, 1), 4),
+            "host_tok_per_s": round((n_tokens - 1)
+                                    / max(steady_s, 1e-9), 1),
+        }
+        rows.append((f"serve.decode.{net}", 1e6 * (time.time() - t0),
+                     json.dumps(bench, sort_keys=True)))
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = [bench_network(name, kw)
             for name, kw in (SMOKE_NETWORKS if smoke else NETWORKS)]
@@ -399,6 +512,8 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows.append(bench_obs_overhead(seq_len=16 if smoke else 64))
     rows.extend(bench_fused_kernels(smoke=smoke))
     rows.extend(bench_dse_sim_gap(smoke=smoke))
+    rows.append(bench_gather_overlap(smoke=smoke))
+    rows.extend(bench_serve_decode(smoke=smoke))
     return rows
 
 

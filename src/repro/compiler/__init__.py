@@ -33,7 +33,7 @@ from repro.compiler.asm import (
     to_binary,
     to_bundle_binary,
 )
-from repro.compiler.cli import compile_network
+from repro.compiler.cli import compile_decode_network, compile_network
 from repro.compiler.partition import (
     BundleSim,
     ChannelEdge,
@@ -41,11 +41,13 @@ from repro.compiler.partition import (
     MultiDeviceProgram,
     PartitionError,
     PartitionPlan,
+    decorate_decode_bundle,
     derive_plan,
     kind_from_rules,
     lower_partitioned,
     optimize_bundle,
     simulate_bundle,
+    steady_bundle,
     validate_bundle,
 )
 from repro.compiler.passes import (
@@ -62,15 +64,19 @@ from repro.compiler.passes import (
 )
 from repro.compiler.runtime import (
     BACKENDS,
+    DecodeSession,
     ExecutionError,
     ExecutorBackend,
+    ExecutorSession,
     GoldenExecutor,
     LayerWeights,
     MultiDeviceExecutor,
     PallasExecutor,
+    ReferenceSession,
     apply_pool,
     bind_synthetic,
     chain_layers,
+    decode_step_ref,
     get_backend,
     im2col_patches,
     requantize,
@@ -78,13 +84,18 @@ from repro.compiler.runtime import (
     synthetic_weights,
 )
 from repro.compiler.lower import (
+    KV_APPEND_STAGE,
+    KV_READ_STAGE,
     LayerAddrs,
+    decorate_decode,
     lower_dsp_layer,
     lower_lut_layer,
     lower_network,
     solve_split_dims,
+    steady_program,
 )
 from repro.compiler.networks import (
+    decode_step_layers,
     list_networks,
     lm_gemm_layers,
     network_layers,
@@ -97,27 +108,36 @@ from repro.compiler.program import (
     MemoryMap,
     Program,
     ProgramStats,
+    RESIDENCY_CLASSES,
     Segment,
+    StepSpec,
     channel_of,
 )
 
 __all__ = [
     "assemble", "disassemble", "disassemble_bundle", "from_binary",
     "from_bundle_binary", "to_binary", "to_bundle_binary",
-    "compile_network",
+    "compile_decode_network", "compile_network",
     "BundleSim", "ChannelEdge", "LinkModel", "MultiDeviceProgram",
-    "PartitionError", "PartitionPlan", "derive_plan", "kind_from_rules",
-    "lower_partitioned", "optimize_bundle", "simulate_bundle",
+    "PartitionError", "PartitionPlan", "decorate_decode_bundle",
+    "derive_plan", "kind_from_rules", "lower_partitioned",
+    "optimize_bundle", "simulate_bundle", "steady_bundle",
     "validate_bundle",
     "O1_PASSES", "Pass", "PassError", "PassPipeline", "PassStats",
     "DmaFusionPass", "SyncElisionPass", "WeightPrefetchPass",
     "optimize_program", "pipeline_for",
-    "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
-    "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
-    "apply_pool", "bind_synthetic", "chain_layers", "get_backend",
-    "im2col_patches", "requantize", "spatialize", "synthetic_weights",
-    "LayerAddrs", "lower_dsp_layer", "lower_lut_layer", "lower_network",
-    "solve_split_dims", "list_networks", "lm_gemm_layers", "network_layers",
+    "BACKENDS", "DecodeSession", "ExecutionError", "ExecutorBackend",
+    "ExecutorSession", "GoldenExecutor", "LayerWeights",
+    "MultiDeviceExecutor", "PallasExecutor", "ReferenceSession",
+    "apply_pool", "bind_synthetic", "chain_layers", "decode_step_ref",
+    "get_backend", "im2col_patches", "requantize", "spatialize",
+    "synthetic_weights",
+    "KV_APPEND_STAGE", "KV_READ_STAGE", "LayerAddrs", "decorate_decode",
+    "lower_dsp_layer", "lower_lut_layer", "lower_network",
+    "solve_split_dims", "steady_program",
+    "decode_step_layers", "list_networks", "lm_gemm_layers",
+    "network_layers",
     "ConvGeometry", "CoreProgram", "GemmLayer", "LayerProgram", "MemoryMap",
-    "Program", "ProgramStats", "Segment", "channel_of",
+    "Program", "ProgramStats", "RESIDENCY_CLASSES", "Segment", "StepSpec",
+    "channel_of",
 ]

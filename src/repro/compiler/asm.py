@@ -69,6 +69,7 @@ from repro.compiler.program import (
     LayerProgram,
     MemoryMap,
     Program,
+    StepSpec,
     channel_of,
 )
 
@@ -229,8 +230,12 @@ def disassemble(prog: Program) -> str:
            f".device {_fmt_fields(prog.device)}",
            f".lutcfg {_fmt_fields(prog.lut_cfg)}",
            f".dspcfg {_fmt_fields(prog.dsp_cfg)}"]
+    if prog.step is not None:
+        out.append(f".step {_fmt_fields(prog.step)}")
     for seg in prog.memory.segments:
-        out.append(f".segment {seg.name} base={seg.base:#x} size={seg.size}")
+        res = "" if seg.residency == "io" else f" residency={seg.residency}"
+        out.append(f".segment {seg.name} base={seg.base:#x} "
+                   f"size={seg.size}{res}")
     for lp in prog.layers:
         geom = "" if lp.geometry is None \
             else f" geom={_fmt_geom(lp.geometry)}"
@@ -259,7 +264,7 @@ def disassemble(prog: Program) -> str:
 def assemble(text: str) -> Program:
     """Parse canonical text assembly back into a :class:`Program`."""
     name = "unnamed"
-    device = lut_cfg = dsp_cfg = None
+    device = lut_cfg = dsp_cfg = step = None
     memory = MemoryMap()
     layers: list[LayerProgram] = []
     cur_core: CoreProgram | None = None
@@ -279,10 +284,13 @@ def assemble(text: str) -> Program:
                 lut_cfg = _parse_fields(LutCoreConfig, _kv(line.split()[1:]))
             elif line.startswith(".dspcfg"):
                 dsp_cfg = _parse_fields(DspCoreConfig, _kv(line.split()[1:]))
+            elif line.startswith(".step"):
+                step = _parse_fields(StepSpec, _kv(line.split()[1:]))
             elif line.startswith(".segment"):
                 toks = line.split()
                 kv = _kv(toks[2:])
-                memory.alloc(toks[1], int(kv["size"]))
+                memory.alloc(toks[1], int(kv["size"]),
+                             residency=kv.get("residency", "io"))
                 if memory[toks[1]].base != int(kv["base"], 0):
                     raise ValueError(
                         f"segment {toks[1]} base {kv['base']} does not match "
@@ -331,7 +339,8 @@ def assemble(text: str) -> Program:
     if device is None or lut_cfg is None or dsp_cfg is None:
         raise ValueError("assembly is missing .device/.lutcfg/.dspcfg")
     return Program(name=name, device=device, lut_cfg=lut_cfg,
-                   dsp_cfg=dsp_cfg, layers=layers, memory=memory)
+                   dsp_cfg=dsp_cfg, layers=layers, memory=memory,
+                   step=step)
 
 
 # ---------------------------------------------------------------------------
@@ -346,7 +355,8 @@ def to_binary(prog: Program) -> bytes:
         "device": _cfg_fields(prog.device),
         "lut_cfg": _cfg_fields(prog.lut_cfg),
         "dsp_cfg": _cfg_fields(prog.dsp_cfg),
-        "segments": [[s.name, s.base, s.size] for s in prog.memory.segments],
+        "segments": [[s.name, s.base, s.size, s.residency]
+                     for s in prog.memory.segments],
         "layers": [{
             "index": lp.index, "name": lp.name,
             "dims": [lp.dims.m, lp.dims.k, lp.dims.n],
@@ -360,6 +370,8 @@ def to_binary(prog: Program) -> bytes:
             } for cp in lp.cores()],
         } for lp in prog.layers],
     }
+    if prog.step is not None:
+        meta["step"] = prog.step.to_meta()
     blob = json.dumps(meta, sort_keys=True,
                       separators=(",", ":")).encode("utf-8")
     parts = [MAGIC, struct.pack("<I", len(blob)), blob]
@@ -394,8 +406,11 @@ def _parse_binary(data: bytes) -> Program:
     lut_cfg = LutCoreConfig(**meta["lut_cfg"])
     dsp_cfg = DspCoreConfig(**meta["dsp_cfg"])
     memory = MemoryMap()
-    for sname, base, size in meta["segments"]:
-        seg = memory.alloc(sname, size)
+    for rec in meta["segments"]:
+        # pre-residency images carry 3-element records; default to "io"
+        sname, base, size = rec[:3]
+        seg = memory.alloc(sname, size,
+                           residency=rec[3] if len(rec) > 3 else "io")
         if seg.base != base:
             raise ValueError(f"segment {sname} base mismatch in image")
 
@@ -432,8 +447,11 @@ def _parse_binary(data: bytes) -> Program:
         layers.append(lp)
     if pos != len(data):
         raise ValueError(f"trailing bytes in image ({len(data) - pos})")
+    step = (StepSpec.from_meta(meta["step"])
+            if meta.get("step") is not None else None)
     return Program(name=meta["program"], device=device, lut_cfg=lut_cfg,
-                   dsp_cfg=dsp_cfg, layers=layers, memory=memory)
+                   dsp_cfg=dsp_cfg, layers=layers, memory=memory,
+                   step=step)
 
 
 # ---------------------------------------------------------------------------

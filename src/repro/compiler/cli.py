@@ -63,6 +63,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fixed LUT filter ratio; default solves Eq. 12")
     p.add_argument("--seq-len", type=int, default=64,
                    help="token count for LM archs")
+    p.add_argument("--decode", action="store_true",
+                   help="compile an autoregressive decode step program "
+                        "(m = --batch) with resident weights and "
+                        "KV-cache/state segments instead of the "
+                        "fixed-sequence program")
+    p.add_argument("--batch", type=int, default=1,
+                   help="sequences per decode step (--decode)")
+    p.add_argument("--max-seq", type=int, default=64,
+                   help="KV-cache/state depth of a decode session "
+                        "(--decode)")
     p.add_argument("--in-hw", type=int, default=None,
                    help="CNN input size (default 224); reduced variants "
                         "stay geometry-consistent end to end")
@@ -149,6 +159,46 @@ def compile_network(name: str, *, device: str = "XC7Z020", bits_w: int = 4,
                              n_luts=n_luts, opt_level=opt_level)
 
 
+def compile_decode_network(name: str, *, batch: int = 1, max_seq: int = 64,
+                           device: str = "XC7Z020", bits_w: int = 4,
+                           bits_a: int = 4, ratio: float | None = None,
+                           lut_m: int = 8, lut_n: int = 16, lut_k: int = 128,
+                           opt_level: int = 0, devices: int = 1,
+                           partition: str | None = None,
+                           link_latency: int | None = None):
+    """Compile the decode-mode step program of an lm/ssm/hybrid arch.
+
+    The emitted program runs one token position for ``batch``
+    sequences: weight segments are residency-class ``weights`` (loaded
+    by the warm-up invocation, reused by ``lower.steady_program``
+    afterwards), attention K/V projections append to ``kv`` cache
+    segments sized for ``max_seq`` positions and SSM blocks carry a
+    persistent ``state`` segment. ``devices > 1`` compiles the bundle
+    via ``lower_partitioned`` and decode-decorates every per-device
+    program (``partition.decorate_decode_bundle``).
+    """
+    from repro.compiler.networks import decode_step_layers
+    dev = DEVICES[device]
+    lut_cfg = LutCoreConfig(m=lut_m, n=lut_n, k=lut_k)
+    dsp_cfg = DspCoreConfig(n_reg_row_a=DspCoreConfig.rows_for_device(dev))
+    layers, spec = decode_step_layers(name, batch=batch, max_seq=max_seq)
+    n_luts = None
+    if ratio is not None:
+        n_luts = [int(round(ratio * gl.dims.n)) for gl in layers]
+    if devices == 1 and partition is None:
+        return lower_network(f"{name}.decode", layers, lut_cfg, dsp_cfg,
+                             dev, bits_w_lut=bits_w, bits_a=bits_a,
+                             n_luts=n_luts, opt_level=opt_level, step=spec)
+    from repro.compiler.partition import decorate_decode_bundle
+    link = LinkModel() if link_latency is None \
+        else LinkModel(latency_cycles=link_latency)
+    plan = derive_plan(layers, devices, kind=partition, link=link)
+    mdp = lower_partitioned(f"{name}.decode", layers, plan, lut_cfg,
+                            dsp_cfg, dev, bits_w_lut=bits_w, bits_a=bits_a,
+                            n_luts=n_luts, opt_level=opt_level)
+    return decorate_decode_bundle(mdp, spec)
+
+
 def summarize_bundle(mdp, simulate: bool = False, batches: int = 8) -> str:
     """Multi-device summary: plan, per-device programs, hand-offs."""
     lines = [
@@ -210,6 +260,11 @@ def summarize(prog, simulate: bool = False) -> str:
                      f"(-{total_before - total_after})")
         for ps in prog.opt_stats:
             lines.append(f"  {ps.render()}")
+    if getattr(prog, "step", None) is not None:
+        sp = prog.step
+        lines.append(f"decode    family={sp.family} batch={sp.batch} "
+                     f"max_seq={sp.max_seq} (resident weights + "
+                     f"persistent kv/state segments)")
     if simulate:
         t0 = time.time()
         ps = simulate_program(prog)
@@ -217,6 +272,12 @@ def summarize(prog, simulate: bool = False) -> str:
         lines.append(f"simulated {ps.total_cycles} cycles "
                      f"({prog.device.cycles_to_ms(ps.total_cycles):.3f} ms "
                      f"@ {prog.device.freq_mhz:.0f} MHz; sim wall {dt:.2f}s)")
+        if hasattr(ps, "steady_cycles"):
+            lines.append(
+                f"  decode: warm-up {ps.warmup_cycles} cycles/token, "
+                f"steady-state {ps.steady_cycles} cycles/token "
+                f"({ps.warmup_cycles / max(ps.steady_cycles, 1):.2f}x "
+                f"warm-up cost)")
         for core in ("lut", "dsp"):
             d = ps.decomposition(core)
             lines.append(f"  {core}: wait={d['l_wait']} run={d['l_run']} "
@@ -241,6 +302,9 @@ def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
     single-device run of the same network.
     """
     is_bundle = hasattr(prog, "devices")
+    step = getattr(prog.devices[0] if is_bundle else prog, "step", None)
+    if step is not None:
+        return _decode_session_report(prog, backend, seed)
     if is_bundle:
         ex = MultiDeviceExecutor(prog, backend=backend)
         layers = ex.layers
@@ -285,6 +349,26 @@ def execute_report(prog, backend: str = "golden", seed: int = 0) -> str:
             f"{what} in {dt:.3f}s (|out| sum {checksum:.6e})")
 
 
+def _decode_session_report(prog, backend: str = "golden", seed: int = 0,
+                           n_tokens: int = 4) -> str:
+    """Drive a short greedy decode through an ``ExecutorSession``: bind
+    synthetic weights once, then step token by token (warm-up program
+    first, steady-state program after)."""
+    from repro.compiler.runtime import ExecutorSession
+    sess = ExecutorSession(prog, backend=backend)
+    sess.bind_synthetic_all(seed=seed if seed else None)
+    token, checksum = 1, 0.0
+    t0 = time.time()
+    for pos in range(n_tokens):
+        logits = np.asarray(sess.step(token, pos))
+        token = int(np.argmax(logits[0]))
+        checksum += float(np.abs(logits).sum())
+    dt = time.time() - t0
+    return (f"decoded   {n_tokens} token(s) via {backend} session in "
+            f"{dt:.3f}s (1 warm-up + {n_tokens - 1} steady step(s), "
+            f"|logits| sum {checksum:.6e})")
+
+
 def main(argv: list[str] | None = None) -> int:
     args = build_parser().parse_args(argv)
     if args.list:
@@ -304,13 +388,22 @@ def main(argv: list[str] | None = None) -> int:
         return 2
 
     try:
-        prog = compile_network(
-            args.network, device=args.device, bits_w=args.bits_w,
-            bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
-            lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k,
-            opt_level=args.opt, devices=args.devices,
-            partition=args.partition, link_latency=args.link_latency,
-            in_hw=args.in_hw, width=args.width)
+        if args.decode:
+            prog = compile_decode_network(
+                args.network, batch=args.batch, max_seq=args.max_seq,
+                device=args.device, bits_w=args.bits_w, bits_a=args.bits_a,
+                ratio=args.ratio, lut_m=args.lut_m, lut_n=args.lut_n,
+                lut_k=args.lut_k, opt_level=args.opt,
+                devices=args.devices, partition=args.partition,
+                link_latency=args.link_latency)
+        else:
+            prog = compile_network(
+                args.network, device=args.device, bits_w=args.bits_w,
+                bits_a=args.bits_a, ratio=args.ratio, seq_len=args.seq_len,
+                lut_m=args.lut_m, lut_n=args.lut_n, lut_k=args.lut_k,
+                opt_level=args.opt, devices=args.devices,
+                partition=args.partition, link_latency=args.link_latency,
+                in_hw=args.in_hw, width=args.width)
     except (KeyError, ValueError, PartitionError) as e:
         msg = e.args[0] if e.args else e
         print(f"error: {msg}", file=sys.stderr)

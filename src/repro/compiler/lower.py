@@ -26,6 +26,7 @@ elision, fused result DMA pairs) over the lowered streams.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 
@@ -48,7 +49,26 @@ from repro.compiler.program import (
     LayerProgram,
     MemoryMap,
     Program,
+    StepSpec,
 )
+
+#: ``stage_ctrl`` values of the persistent-segment DMAs emitted by the
+#: decode decoration (0=weights, 1=acts, 2=result, 3=gather are taken
+#: by the fixed-seq lowering and the filter-parallel partitioner).
+#: A stage-4 Result appends one row to a ``kv``/``state`` segment at
+#: ``base + pos * row_bytes`` (``pos`` is the step-position register
+#: supplied per invocation); a stage-5 Fetch reads the persistent
+#: window back (timed at the worst-case ``max_seq`` footprint).
+KV_APPEND_STAGE = 4
+KV_READ_STAGE = 5
+PERSISTENT_STAGES = (KV_APPEND_STAGE, KV_READ_STAGE)
+
+#: Channels whose tokens are posted by the fetch engine strictly after
+#: weight fetches — the sends that go away with the fetches when a
+#: steady-state decode program elides resident-weight loads.
+_WEIGHT_FETCH_SENDS = frozenset({"lut.wtile", "dsp.wall", "dsp.wtile"})
+#: Fetch-engine waits that exist only to gate weight-tile fetches.
+_WEIGHT_FETCH_WAITS = frozenset({"lut.wslot"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,8 +357,20 @@ def lower_network(name: str, layers: list[GemmLayer],
                   bits_a: int | list[int] = 4,
                   n_luts: list[int] | None = None,
                   opt_level: int = 0,
-                  plan=None) -> Program:
+                  plan=None,
+                  step: StepSpec | None = None) -> Program:
     """Compile a whole network into a :class:`Program`.
+
+    ``step`` (a :class:`~repro.compiler.program.StepSpec`) switches to
+    *decode mode*: ``layers`` must be the m=batch single-step GEMM
+    list, and the lowered program is decorated with the invocation
+    contract — weight segments become ``weights``-resident, attention
+    k/v projections gain persistent ``kv`` cache segments (stage-4
+    append at the step position, stage-5 read-back before the output
+    projection) and SSM blocks a persistent ``state`` segment — before
+    the optimization pipeline runs (see :func:`decorate_decode`;
+    :func:`steady_program` derives the warm-cache variant whose weight
+    fetches are elided).
 
     ``plan`` (a ``partition.PartitionPlan``) switches to the
     multi-device path: the network is partitioned per the plan and a
@@ -456,8 +488,146 @@ def lower_network(name: str, layers: list[GemmLayer],
 
     prog = Program(name=name, device=dev, lut_cfg=lut_cfg, dsp_cfg=dsp_cfg,
                    layers=progs, memory=mem)
+    if step is not None:
+        decorate_decode(prog, step)
     if opt_level:
         # deferred import: passes.py consumes Program, not the lowerer
         from repro.compiler.passes import optimize_program
         prog = optimize_program(prog, opt_level, copy_program=False)
     return prog
+
+
+# ---------------------------------------------------------------------------
+# Decode mode: residency decoration + steady-state weight-fetch elision
+# ---------------------------------------------------------------------------
+
+
+def _first_core(lp: LayerProgram) -> CoreProgram:
+    return lp.lut if lp.lut is not None else lp.dsp
+
+
+def _persistent_insert_at(cp: CoreProgram) -> int:
+    """Index after the leading barrier/cross-device waits of a fetch
+    stream — persistent reads slot in once the layer is released."""
+    at = 0
+    stream = cp.streams["fetch"]
+    while at < len(stream) and isinstance(stream[at].instr, isa.SyncInstr):
+        at += 1
+    return at
+
+
+def _persistent_append_at(cp: CoreProgram) -> int:
+    """Index before the trailing barrier sends of a result stream —
+    persistent appends land before the next layer is released."""
+    stream = cp.streams["result"]
+    at = len(stream)
+    while at > 0 and isinstance(stream[at - 1].instr, isa.SyncInstr):
+        at -= 1
+    return at
+
+
+def decorate_decode(prog: Program, step: StepSpec) -> Program:
+    """Stamp the invocation contract onto a lowered m=batch program.
+
+    Driven purely by layer names (so it applies unchanged to the
+    per-device shards of a partitioned bundle, which keep them):
+
+      * every ``L{i}.wgt.*`` segment becomes ``weights``-resident;
+      * ``*.attn.k`` / ``*.attn.v`` layers allocate a persistent ``kv``
+        segment (``max_seq`` rows of the requantized projection output)
+        and append one row per invocation via a stage-4 Result at the
+        step position;
+      * ``*.attn.o`` layers read both caches of their block back
+        through stage-5 Fetches (timed at the worst-case full window);
+      * ``*.ssm.out`` layers allocate a per-block fp32 ``state``
+        segment, read it at the fetch head and write it back in place
+        at the result tail.
+    """
+    mem, dev = prog.memory, prog.device
+    for seg in list(mem.segments):
+        if ".wgt." in seg.name:
+            mem.set_residency(seg.name, "weights")
+    for lp in prog.layers:
+        cp = _first_core(lp)
+        if lp.name.endswith((".attn.k", ".attn.v")):
+            row = math.ceil(step.batch * lp.dims.n * lp.bits_a / 8)
+            seg = mem.alloc(f"{lp.name}.cache", step.max_seq * row,
+                            residency="kv")
+            cp.streams["result"].insert(
+                _persistent_append_at(cp),
+                Op(isa.ResultInstr(cp.core, 0, KV_APPEND_STAGE, 0,
+                                   seg.base, 0, _clamp16(row)),
+                   cycles=_dma_cycles(row, dev)))
+            cp.bytes_written += row
+        elif lp.name.endswith(".attn.o"):
+            blk = lp.name.rsplit(".", 2)[0]
+            at = _persistent_insert_at(cp)
+            for which in ("k", "v"):
+                cache = f"{blk}.attn.{which}.cache"
+                if cache not in mem:
+                    continue
+                seg = mem[cache]
+                cp.streams["fetch"].insert(
+                    at, Op(isa.FetchInstr(cp.core, 0, KV_READ_STAGE, 0,
+                                          seg.base, 0, _clamp16(seg.size)),
+                           cycles=_dma_cycles(seg.size, dev)))
+                cp.bytes_fetched += seg.size
+                at += 1
+        elif lp.name.endswith(".ssm.out"):
+            # fp32 recurrent state, one row per batch lane, in-place
+            nbytes = step.batch * lp.dims.k * 4
+            seg = mem.alloc(f"{lp.name.rsplit('.', 1)[0]}.state", nbytes,
+                            residency="state")
+            cp.streams["fetch"].insert(
+                _persistent_insert_at(cp),
+                Op(isa.FetchInstr(cp.core, 0, KV_READ_STAGE, 0,
+                                  seg.base, 0, _clamp16(nbytes)),
+                   cycles=_dma_cycles(nbytes, dev)))
+            cp.streams["result"].insert(
+                _persistent_append_at(cp),
+                Op(isa.ResultInstr(cp.core, 0, KV_APPEND_STAGE, 0,
+                                   seg.base, 0, _clamp16(nbytes)),
+                   cycles=_dma_cycles(nbytes, dev)))
+            cp.bytes_fetched += nbytes
+            cp.bytes_written += nbytes
+    prog.step = step
+    return prog
+
+
+def steady_program(prog: Program) -> Program:
+    """Derive the steady-state variant of a decode program: stage-0
+    fetches into ``weights``-resident segments are elided along with
+    their slot waits and ready sends, whose tokens are armed as initial
+    tokens instead (the tiles are already on chip from the warm-up
+    invocation). Persistent kv/state traffic and all activation
+    movement survive — steady state moves only the new token.
+    """
+    if prog.step is None:
+        raise ValueError("steady_program needs a decode program "
+                         "(Program.step is None)")
+    out = copy.deepcopy(prog)
+    out.name = f"{prog.name}.steady"
+    resident = {s.base for s in out.memory.segments
+                if s.residency == "weights"}
+    for lp in out.layers:
+        for cp in lp.cores():
+            kept: list[Op] = []
+            for op in cp.streams["fetch"]:
+                ins = op.instr
+                if (isinstance(ins, isa.FetchInstr)
+                        and ins.stage_ctrl == 0
+                        and ins.ddr_base in resident):
+                    cp.bytes_fetched -= max(
+                        0.0, (op.cycles - prog.device.dma_setup_cycles)
+                        * prog.device.dma_bytes_per_cycle)
+                    continue
+                if isinstance(ins, isa.SyncInstr):
+                    if ins.is_wait and op.channel in _WEIGHT_FETCH_WAITS:
+                        continue
+                    if not ins.is_wait and op.channel in _WEIGHT_FETCH_SENDS:
+                        cp.initial_tokens[op.channel] = \
+                            cp.initial_tokens.get(op.channel, 0) + 1
+                        continue
+                kept.append(op)
+            cp.streams["fetch"] = kept
+    return out

@@ -180,6 +180,39 @@ def network_layers(name: str, seq_len: int = 64, smoke: bool = True,
     return lm_gemm_layers(cfg, seq_len)
 
 
+def decode_step_layers(name: str, batch: int = 1, max_seq: int = 64,
+                       smoke: bool = True):
+    """(layers, StepSpec) for one autoregressive decode step.
+
+    The layer list is the ordinary GEMM walk at ``m = batch`` (one
+    token per sequence); the :class:`~repro.compiler.program.StepSpec`
+    carries the glue geometry (family, attention heads, cache depth)
+    that ``lower_network(step=...)`` needs to decorate the program with
+    weight residency and KV-cache/state segments.
+    """
+    from repro.configs import registry
+    from repro.compiler.program import StepSpec
+    if name in WORKLOADS:
+        raise ValueError(f"{name}: CNN workloads have no decode mode")
+    arch = registry.get(name)
+    if arch.module not in ("lm", "ssm", "hybrid"):
+        raise ValueError(
+            f"{name}: decode mode supports lm/ssm/hybrid archs, "
+            f"not {arch.module}")
+    cfg = arch.smoke if (smoke and arch.smoke is not None) else arch.model
+    if getattr(cfg, "mla", None) is not None:
+        raise ValueError(f"{name}: decode mode does not model MLA "
+                         f"latent caches")
+    has_attn = hasattr(cfg, "n_heads")
+    spec = StepSpec(
+        family=arch.module, batch=batch, max_seq=max_seq,
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads if has_attn else 0,
+        n_kv_heads=cfg.n_kv_heads if has_attn else 0,
+        head_dim=cfg.head_dim if has_attn else 0)
+    return lm_gemm_layers(cfg, batch), spec
+
+
 def list_networks() -> list[str]:
     from repro.configs import registry
     return sorted(WORKLOADS) + registry.list_archs()

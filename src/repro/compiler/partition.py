@@ -345,7 +345,8 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
                       bits_w_lut: int | list[int] = 4,
                       bits_a: int | list[int] = 4,
                       n_luts: list[int] | None = None,
-                      opt_level: int = 0) -> MultiDeviceProgram:
+                      opt_level: int = 0,
+                      gather_overlap: bool = True) -> MultiDeviceProgram:
     """Compile ``layers`` under ``plan`` into a MultiDeviceProgram.
 
     Every per-device program goes through the ordinary
@@ -354,6 +355,13 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
     :func:`optimize_bundle`, which re-validates the cross-device token
     pairing afterwards). A 1-device plan of either kind reproduces the
     legacy single program bit for bit.
+
+    ``gather_overlap`` (filter plans) places each gather [wait + link
+    DMA] pair at the tail of the *producing* layer's fetch stream, so
+    the link transfer overlaps that layer's execute/result work instead
+    of serializing at the consuming layer's head (the pre-overlap
+    behavior, kept under ``gather_overlap=False`` for the makespan
+    comparison benchmark).
     """
     nl = len(layers)
     bw = _per_layer(bits_w_lut, nl, "bit")
@@ -439,7 +447,18 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
                     math.ceil(g.m * (g.n - widths[d][i]) * ba[i + 1] / 8))
                 src_cp = _first_core(prog.layers[i])
                 dst_cp = _first_core(prog.layers[i + 1])
-                at = _fetch_insert_at(dst_cp)
+                if gather_overlap:
+                    # overlap placement: the gather DMAs ride at the
+                    # tail of the *producing* layer's fetch stream, so
+                    # the link transfer overlaps that layer's
+                    # execute/result work (its xdev wait is armed by the
+                    # peer's result-tail send within the same lockstep
+                    # layer window)
+                    gather_cp, gather_layer = src_cp, i
+                    at = len(src_cp.streams["fetch"])
+                else:
+                    gather_cp, gather_layer = dst_cp, i + 1
+                    at = _fetch_insert_at(dst_cp)
                 # peer shards stage into the gather segment in device
                 # order (self excluded); the DMA's ddr_offset is that
                 # staging ordinal, per the tile-index-into-segment
@@ -450,19 +469,20 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
                     src_cp.streams["result"].append(_xdev_send(src_cp))
                     # incoming: wait for p's shard, then DMA it over
                     # the link into the gather segment
-                    dst_cp.streams["fetch"].insert(at, _xdev_wait(dst_cp))
-                    dst_cp.streams["fetch"].insert(at + 1, Op(
-                        isa.FetchInstr(dst_cp.core, 0, GATHER_STAGE, 0,
+                    gather_cp.streams["fetch"].insert(
+                        at, _xdev_wait(gather_cp))
+                    gather_cp.streams["fetch"].insert(at + 1, Op(
+                        isa.FetchInstr(gather_cp.core, 0, GATHER_STAGE, 0,
                                        gather.base, rank, _clamp16(nbytes)),
                         cycles=plan.link.cycles(nbytes)))
-                    dst_cp.bytes_fetched += nbytes
+                    gather_cp.bytes_fetched += nbytes
                     at += 2
                     peer_cp = _first_core(progs[p].layers[i])
                     edges.append(ChannelEdge(
                         src_device=p, src_layer=i,
-                        dst_device=d, dst_layer=i + 1,
+                        dst_device=d, dst_layer=gather_layer,
                         src_channel=f"{CORE_NAMES[peer_cp.core]}.xdev",
-                        dst_channel=f"{CORE_NAMES[dst_cp.core]}.xdev",
+                        dst_channel=f"{CORE_NAMES[gather_cp.core]}.xdev",
                         nbytes=nbytes))
     mdp = MultiDeviceProgram(name, plan, progs, edges)
     return optimize_bundle(mdp, opt_level) if opt_level else mdp
@@ -647,3 +667,35 @@ def simulate_bundle(mdp: MultiDeviceProgram, batches: int = 1,
                                  ps.layers, windows=windows)
     tracer.set_makespan(latency)
     return bs
+
+
+# ---------------------------------------------------------------------------
+# Decode-resident bundles (multi-device autoregressive serving)
+# ---------------------------------------------------------------------------
+
+
+def decorate_decode_bundle(mdp: MultiDeviceProgram, step) -> MultiDeviceProgram:
+    """Apply :func:`~repro.compiler.lower.decorate_decode` to every
+    per-device program in place: weight segments become resident, and
+    each device's attention/SSM shard gains its own (shard-sized)
+    KV-cache/state segment plus the persistent read/append DMAs. The
+    decoration adds no cross-device syncs, so the edge table is
+    untouched (re-validated to be sure)."""
+    from repro.compiler.lower import decorate_decode
+    for p in mdp.devices:
+        decorate_decode(p, step)
+    validate_bundle(mdp)
+    return mdp
+
+
+def steady_bundle(mdp: MultiDeviceProgram) -> MultiDeviceProgram:
+    """The steady-state decode variant of a decorated bundle: each
+    device program through :func:`~repro.compiler.lower.steady_program`
+    (weight fetches elided, their tokens pre-armed); the cross-device
+    hand-offs are untouched, so the edge table carries over verbatim."""
+    from repro.compiler.lower import steady_program
+    out = MultiDeviceProgram(f"{mdp.name}.steady", mdp.plan,
+                             [steady_program(p) for p in mdp.devices],
+                             list(mdp.edges))
+    validate_bundle(out)
+    return out

@@ -369,6 +369,10 @@ class DmaFusionPass:
         nbytes = a.ddr_range + b.ddr_range
         ok = (a.ddr_base == b.ddr_base
               and a.stage_ctrl == b.stage_ctrl
+              # never fuse gather (3) or persistent kv/state (4/5) DMAs:
+              # their offsets are peer ranks / step positions, not
+              # consecutive output tiles
+              and a.stage_ctrl < 3
               and b.ddr_offset == a.ddr_offset + ca
               and ca + cb <= cls.max_burst
               # clamped lengths hide the true byte count: don't fuse

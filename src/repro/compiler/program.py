@@ -84,13 +84,29 @@ def channel_of(instr: isa.SyncInstr) -> str:
 # ---------------------------------------------------------------------------
 
 
+#: Segment residency classes — the invocation contract for decode-mode
+#: programs. ``io`` segments are per-step scratch (reloaded/rewritten on
+#: every invocation); ``weights`` segments survive *across* invocations
+#: (the first step loads them, steady-state steps reuse the resident
+#: tiles); ``kv``/``state`` segments are persistent and updated in place
+#: (attention KV rows appended at the step position, SSM recurrent state
+#: read-modify-written each step).
+RESIDENCY_CLASSES = ("io", "weights", "kv", "state")
+
+
 @dataclasses.dataclass(frozen=True)
 class Segment:
     """One named DDR region. ``size`` in bytes; tile-granular DMA
-    instructions address it as (ddr_base=base, ddr_offset=tile index)."""
+    instructions address it as (ddr_base=base, ddr_offset=tile index).
+    ``residency`` is the invocation-contract class (RESIDENCY_CLASSES)."""
     name: str
     base: int
     size: int
+    residency: str = "io"
+
+    def __post_init__(self):
+        if self.residency not in RESIDENCY_CLASSES:
+            raise ValueError(f"unknown residency class {self.residency!r}")
 
     @property
     def end(self) -> int:
@@ -107,17 +123,27 @@ class MemoryMap:
         self._by_name: dict[str, Segment] = {}
         self._cursor = 0
 
-    def alloc(self, name: str, size: int) -> Segment:
+    def alloc(self, name: str, size: int,
+              residency: str = "io") -> Segment:
         if name in self._by_name:
             raise ValueError(f"duplicate segment {name!r}")
         size = max(int(size), 0)
         base = self._cursor
-        seg = Segment(name, base, size)
+        seg = Segment(name, base, size, residency)
         aligned = (size + self.ALIGN - 1) // self.ALIGN * self.ALIGN
         self._cursor = base + aligned
         if self._cursor >= (1 << 32):
             raise ValueError(f"DDR map overflows 32-bit space at {name!r}")
         self.segments.append(seg)
+        self._by_name[name] = seg
+        return seg
+
+    def set_residency(self, name: str, residency: str) -> Segment:
+        """Reclassify an existing segment (segments are frozen, so the
+        record is replaced in place — base/size identity unchanged)."""
+        old = self._by_name[name]
+        seg = dataclasses.replace(old, residency=residency)
+        self.segments[self.segments.index(old)] = seg
         self._by_name[name] = seg
         return seg
 
@@ -270,6 +296,43 @@ class LayerProgram:
 
 
 # ---------------------------------------------------------------------------
+# Decode-step invocation header
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """Invocation header of a decode-mode program.
+
+    A program carrying a StepSpec is a *step* program: one invocation
+    advances generation by one token position. The runtime contract is
+    a step-position register ``pos`` supplied per invocation — every
+    persistent-segment access (``kv`` append/read) is addressed as
+    ``segment.base + pos * row_bytes`` — plus the residency classes on
+    the memory map: after the warm-up invocation, ``weights`` segments
+    are resident and their fetches are elided (:func:`lower.steady_program`).
+
+    ``family`` is the registry module kind (``lm``/``ssm``/``hybrid``)
+    and the attention geometry fields drive the session glue between
+    compiled GEMMs (zeros for pure-SSM programs).
+    """
+    family: str
+    batch: int
+    max_seq: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+
+    def to_meta(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_meta(meta: dict) -> "StepSpec":
+        return StepSpec(**meta)
+
+
+# ---------------------------------------------------------------------------
 # Whole-network Program
 # ---------------------------------------------------------------------------
 
@@ -303,6 +366,8 @@ class Program:
     # Per-pass accounting attached by passes.PassPipeline (not part of
     # the program identity: excluded from __eq__ and serialization).
     opt_stats: list = dataclasses.field(default_factory=list, repr=False)
+    # Decode invocation header (None for plain fixed-seq programs).
+    step: StepSpec | None = None
 
     def stats(self) -> ProgramStats:
         by_op = {op.name: 0 for op in isa.Opcode}
@@ -339,6 +404,8 @@ class Program:
         """
         h = hashlib.sha256(self.name.encode())
         h.update(self.device.name.encode())
+        if self.step is not None:
+            h.update(repr(self.step).encode())
         for w in self.words():
             h.update(w.to_bytes(16, "little"))
         return h.hexdigest()
@@ -351,7 +418,8 @@ class Program:
                 and self.lut_cfg == other.lut_cfg
                 and self.dsp_cfg == other.dsp_cfg
                 and self.layers == other.layers
-                and self.memory == other.memory)
+                and self.memory == other.memory
+                and self.step == other.step)
 
 
 # ---------------------------------------------------------------------------

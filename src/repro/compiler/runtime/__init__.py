@@ -32,6 +32,12 @@ from repro.compiler.runtime.base import (
 from repro.compiler.runtime.golden import GoldenExecutor
 from repro.compiler.runtime.multi import MultiDeviceExecutor
 from repro.compiler.runtime.pallas import PallasExecutor
+from repro.compiler.runtime.session import (
+    DecodeSession,
+    ExecutorSession,
+    ReferenceSession,
+    decode_step_ref,
+)
 
 BACKENDS: dict[str, type[ExecutorBackend]] = {
     GoldenExecutor.name: GoldenExecutor,
@@ -50,8 +56,10 @@ def get_backend(name: str) -> type[ExecutorBackend]:
 
 
 __all__ = [
-    "BACKENDS", "ExecutionError", "ExecutorBackend", "GoldenExecutor",
-    "LayerWeights", "MultiDeviceExecutor", "PallasExecutor",
-    "apply_pool", "bind_synthetic", "chain_layers", "get_backend",
-    "im2col_patches", "requantize", "spatialize", "synthetic_weights",
+    "BACKENDS", "DecodeSession", "ExecutionError", "ExecutorBackend",
+    "ExecutorSession", "GoldenExecutor", "LayerWeights",
+    "MultiDeviceExecutor", "PallasExecutor", "ReferenceSession",
+    "apply_pool", "bind_synthetic", "chain_layers", "decode_step_ref",
+    "get_backend", "im2col_patches", "requantize", "spatialize",
+    "synthetic_weights",
 ]

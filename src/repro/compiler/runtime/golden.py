@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.core import isa
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.compiler.lower import KV_APPEND_STAGE, KV_READ_STAGE
 from repro.compiler.program import CORE_NAMES, CoreProgram, LayerProgram
 from repro.compiler.runtime.base import ExecutionError, ExecutorBackend
 
@@ -60,6 +61,13 @@ class GoldenExecutor(ExecutorBackend):
         act = mem["act.in"] if src < 0 else mem[f"L{src}.out"]
         out = mem[f"L{lp.index}.out"]
         return wgt, act, out
+
+    def _persistent_segment(self, lp: LayerProgram, base: int):
+        """The kv/state-residency segment at ``base``, or None."""
+        for seg in self.program.memory.segments:
+            if seg.base == base and seg.residency in ("kv", "state"):
+                return seg
+        return None
 
     def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
                   w_codes, w_scales) -> jnp.ndarray:
@@ -105,16 +113,31 @@ class GoldenExecutor(ExecutorBackend):
                 act_loaded = True
             elif i.stage_ctrl == 3:                  # cross-device gather
                 # filter-parallel plans (compiler/partition.py) stage
-                # peer activation shards in the previous layer's gather
-                # segment; the data itself arrives via the link (the
-                # executor is handed the gathered activations), so only
-                # the addressing contract is checked here.
-                gname = f"L{lp.index - 1}.gather"
+                # peer activation shards in a gather segment — issued at
+                # the producing layer's fetch tail (overlap placement)
+                # or the consuming layer's fetch head (legacy); the data
+                # itself arrives via the link (the executor is handed
+                # the gathered activations), so only the addressing
+                # contract is checked here.
                 mem = self.program.memory
-                if gname not in mem or i.ddr_base != mem[gname].base:
+                names = (f"L{lp.index}.gather", f"L{lp.index - 1}.gather")
+                if not any(g in mem and i.ddr_base == mem[g].base
+                           for g in names):
                     raise ExecutionError(
                         f"L{lp.index} {core_name}: gather fetch addresses "
-                        f"{i.ddr_base:#x}, expected segment {gname}")
+                        f"{i.ddr_base:#x}, expected one of {names}")
+            elif i.stage_ctrl == KV_READ_STAGE:      # persistent KV/state
+                # decode programs (compiler/lower.py decorate_decode)
+                # read the layer's live cache/state segment; the session
+                # runtime carries the actual cache contents, so only the
+                # addressing contract (a kv/state-residency segment) is
+                # checked here.
+                seg = self._persistent_segment(lp, i.ddr_base)
+                if seg is None:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: persistent read "
+                        f"addresses {i.ddr_base:#x}, which is not a "
+                        f"kv/state segment")
             else:
                 raise ExecutionError(
                     f"L{lp.index} {core_name}: fetch stage_ctrl="
@@ -125,6 +148,11 @@ class GoldenExecutor(ExecutorBackend):
         # DSP whole-weight residency: a single stage-0 fetch at offset 0
         # DMAs the entire weight matrix, covering every column tile.
         if core_name == "dsp" and n_wgt_fetches == 1 and 0 in fetched_wtiles:
+            fetched_wtiles.update(range(nt_n))
+        # Steady-state decode residency: a weights-resident segment with
+        # no fetch in the stream means the tiles stayed on chip from the
+        # warm-up invocation (compiler/lower.py steady_program).
+        if n_wgt_fetches == 0 and wgt_seg.residency == "weights":
             fetched_wtiles.update(range(nt_n))
 
         # 2. Execute stream: tile GEMMs through the reference numerics.
@@ -176,6 +204,18 @@ class GoldenExecutor(ExecutorBackend):
         for op in cp.streams["result"]:
             i = op.instr
             if not isinstance(i, isa.ResultInstr):
+                continue
+            if i.stage_ctrl == KV_APPEND_STAGE:      # persistent KV/state
+                # decode programs append this step's K/V rows (or write
+                # back the recurrent state) to a live cache segment; the
+                # session runtime owns the contents — check addressing
+                # only, and do not count it toward the output tiling.
+                seg = self._persistent_segment(lp, i.ddr_base)
+                if seg is None:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: persistent write "
+                        f"addresses {i.ddr_base:#x}, which is not a "
+                        f"kv/state segment")
                 continue
             if i.ddr_base != out_seg.base:
                 raise ExecutionError(

@@ -1,0 +1,459 @@
+"""Decode sessions: resident weights + live KV/state over an executor.
+
+An autoregressive decode invocation is not one program run — it is a
+*session*: weights are bound once and stay resident on chip, each
+``step(token, pos)`` executes the per-token step program against live
+cache buffers, and only the first invocation pays for the weight DMAs
+(``compiler/lower.py`` decorate_decode / steady_program pair).
+
+Two session flavors share all the inter-GEMM glue (embedding lookup,
+causal attention over the KV cache, SiLU-gated MLPs and MoE routing,
+the diagonal SSM recurrence, inter-unit requantization):
+
+  * :class:`ExecutorSession` — drives a compiled backend
+    (``GoldenExecutor``/``PallasExecutor`` over a decorated
+    :class:`~repro.compiler.program.Program`, or a
+    ``MultiDeviceExecutor`` over a decorated bundle). The first step
+    runs the warm-up program (weight fetches included); every later
+    step runs the steady-state program whose weight fetches are elided
+    — the golden backend's contract checks then *prove* no weight DMA
+    is re-issued.
+  * :class:`ReferenceSession` — the plain-jax ``decode_step``
+    reference: whole-layer ``kernels/ref.py`` GEMMs (no tiling, no ISA
+    walk) through the identical glue. Bit-exactness of an
+    ExecutorSession against this reference is the decode analogue of
+    the repo's executor-vs-oracle parity tests.
+
+The glue models the *functional* shape of a decode step over the
+compiled projection GEMMs — causal softmax attention with GQA over an
+int-coded KV cache, SiLU-gated MLPs, softmax-weighted MoE experts, a
+gated diagonal SSM recurrence — but (like the layer walk in
+``compiler/networks.py``) no norms or residual adds: the reference and
+the sessions apply exactly the same glue, so parity is meaningful
+without modeling the full model frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.uniform import fit_scale, qrange
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.compiler.runtime.base import (
+    ExecutionError,
+    LayerWeights,
+    requantize,
+    synthetic_weights,
+)
+
+#: donated in-place cache append for the pallas path: the previous
+#: cache buffer is handed to XLA for reuse, so a long decode session
+#: updates one device-side buffer instead of allocating per step.
+_donated_append = jax.jit(lambda cache, row, pos: cache.at[pos].set(row),
+                          donate_argnums=(0,))
+
+
+@dataclasses.dataclass(frozen=True)
+class _Unit:
+    """One glue unit of the decode step: a run of consecutive layers
+    (attention q/k/v/o, MLP gate/up/down, MoE router+experts, SSM
+    in/out projections, or the lm head) plus the glue between them."""
+    kind: str                  # "attn" | "mlp" | "moe" | "ssm" | "head"
+    idxs: tuple[int, ...]
+
+
+def _block_plan(layers) -> list[_Unit]:
+    """Group a decode program's layer list into glue units by the
+    naming convention of ``compiler/networks.py``."""
+    units: list[_Unit] = []
+    i, n = 0, len(layers)
+    while i < n:
+        name = layers[i].name
+        if name == "lm_head":
+            units.append(_Unit("head", (i,)))
+            i += 1
+        elif name.endswith(".attn.q"):
+            units.append(_Unit("attn", tuple(range(i, i + 4))))
+            i += 4
+        elif name.endswith(".ssm.in_zx"):
+            units.append(_Unit("ssm", tuple(range(i, i + 4))))
+            i += 4
+        elif name.endswith(".mlp.gate"):
+            units.append(_Unit("mlp", tuple(range(i, i + 3))))
+            i += 3
+        elif name.endswith(".mlp.router"):
+            idxs = [i]
+            i += 1
+            while i < n and (".mlp.e" in layers[i].name
+                             or ".mlp.shared." in layers[i].name):
+                idxs.append(i)
+                i += 1
+            units.append(_Unit("moe", tuple(idxs)))
+        else:
+            raise ExecutionError(
+                f"decode session cannot place layer {name!r} in a glue "
+                f"unit (attn/mlp/moe/ssm/head naming expected)")
+    return units
+
+
+def _quant_with_scale(x: jnp.ndarray, bits: int):
+    """``requantize`` that also returns the max-abs scale — cache rows
+    are stored as integer codes (what the KV segment bytes hold) with
+    their per-step dequant scale alongside."""
+    s = fit_scale(x, bits)
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / s), lo, hi).astype(jnp.int8), s
+
+
+class DecodeSession:
+    """Shared decode-step state machine (glue + caches + embedding).
+
+    Subclasses implement :meth:`_run_layer` (how one projection GEMM is
+    computed) and :meth:`bind_layer`. ``step(token, pos)`` embeds the
+    token, walks the glue units, and returns fp32 logits [batch,
+    padded_vocab]; caches/state advance in place.
+    """
+
+    #: subclass tag used in tracer span names ("ref", "golden", ...)
+    session_name = "base"
+
+    def __init__(self, layers, spec, name: str, tracer=None):
+        if spec is None:
+            raise ExecutionError(
+                f"{name}: program carries no StepSpec — compile it in "
+                f"decode mode (lower_network(step=...))")
+        if tracer is None:
+            from repro.obs import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
+        self.layers = list(layers)
+        self.spec = spec
+        self.program_name = name
+        self.units = _block_plan(self.layers)
+        self.pos = 0
+        self._embed_table = None
+        self._caches: dict[int, dict[str, jnp.ndarray]] = {}
+        self.reset()
+
+    # -- session state -----------------------------------------------------
+
+    def reset(self) -> None:
+        """Clear the KV caches / SSM states and rewind to position 0.
+        Bound weights stay resident (a new sequence, not a new model)."""
+        S, B = self.spec.max_seq, self.spec.batch
+        self.pos = 0
+        self._caches = {}
+        for u_i, unit in enumerate(self.units):
+            if unit.kind == "attn":
+                n_kv = self.layers[unit.idxs[1]].dims.n
+                self._caches[u_i] = {
+                    "k": jnp.zeros((S, B, n_kv), jnp.int8),
+                    "v": jnp.zeros((S, B, n_kv), jnp.int8),
+                    "ks": jnp.zeros((S,), jnp.float32),
+                    "vs": jnp.zeros((S,), jnp.float32),
+                }
+            elif unit.kind == "ssm":
+                d_inner = self.layers[unit.idxs[3]].dims.k
+                self._caches[u_i] = {
+                    "state": jnp.zeros((B, d_inner), jnp.float32)}
+
+    def bind_embedding(self, table) -> None:
+        """Bind the token-embedding code table [vocab, d_model] int8
+        (codes at the first layer's ``bits_a``)."""
+        table = jnp.asarray(table, jnp.int8)
+        if table.ndim != 2 or table.shape[1] != self.spec.d_model:
+            raise ExecutionError(
+                f"embedding table must be [vocab, {self.spec.d_model}], "
+                f"got {tuple(table.shape)}")
+        self._embed_table = table
+
+    def bind_synthetic_all(self, seed: int | None = None) -> None:
+        """Bind deterministic synthetic weights for every layer plus a
+        synthetic embedding table — the same generation for every
+        session flavor, so parity tests compare identical models."""
+        for lp in self.layers:
+            w_lut, s_lut, w_dsp, s_dsp = synthetic_weights(
+                lp.index, lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut,
+                lp.bits_w_lut,
+                None if seed is None else seed + lp.index)
+            self.bind_layer(lp.index, w_lut=w_lut, s_lut=s_lut,
+                            w_dsp=w_dsp, s_dsp=s_dsp)
+        bits = self.layers[0].bits_a
+        vocab = self.layers[-1].dims.n
+        rng = np.random.default_rng(10_000 + (seed or 0))
+        lo, hi = qrange(bits)
+        self.bind_embedding(
+            rng.integers(lo, hi + 1, (vocab, self.spec.d_model)))
+
+    # -- the decode step ---------------------------------------------------
+
+    def step(self, token, pos: int | None = None) -> jnp.ndarray:
+        """Run one decode step: embed ``token`` ([batch] int32 or a
+        scalar), advance the caches at ``pos`` (default: the session's
+        running position) and return fp32 logits [batch, vocab]."""
+        pos = self.pos if pos is None else int(pos)
+        if not 0 <= pos < self.spec.max_seq:
+            raise ExecutionError(
+                f"step position {pos} outside the session's "
+                f"[0, {self.spec.max_seq}) cache window")
+        x = self._embed_tokens(token)
+        logits = None
+        for u_i, unit in enumerate(self.units):
+            out = self._run_unit(u_i, unit, x, pos)
+            if unit.kind == "head":
+                logits = out
+                break
+            nxt = self.units[u_i + 1]
+            x = requantize(out, self.layers[nxt.idxs[0]].bits_a)
+        self.pos = pos + 1
+        return logits
+
+    def _embed_tokens(self, token) -> jnp.ndarray:
+        B = self.spec.batch
+        tok = jnp.asarray(token, jnp.int32).reshape(-1)
+        if tok.shape[0] == 1 and B > 1:
+            tok = jnp.broadcast_to(tok, (B,))
+        if tok.shape[0] != B:
+            raise ExecutionError(
+                f"step token must be scalar or [{B}], got "
+                f"{tuple(tok.shape)}")
+        if self._embed_table is None:
+            raise ExecutionError(
+                "no embedding table bound (bind_embedding / "
+                "bind_synthetic_all)")
+        return self._embed_table[tok]
+
+    # -- glue units --------------------------------------------------------
+
+    def _run_unit(self, u_i: int, unit: _Unit, x_q, pos: int):
+        if unit.kind == "head":
+            return self._run_layer(unit.idxs[0], x_q)
+        if unit.kind == "attn":
+            return self._attn_unit(u_i, unit, x_q, pos)
+        if unit.kind == "ssm":
+            return self._ssm_unit(u_i, unit, x_q)
+        if unit.kind == "mlp":
+            return self._mlp(unit.idxs, x_q)
+        return self._moe_unit(unit, x_q)
+
+    def _mlp(self, idxs, x_q):
+        ig, iu, idn = idxs
+        h = jax.nn.silu(self._run_layer(ig, x_q)) * self._run_layer(iu, x_q)
+        return self._run_layer(idn, requantize(h, self.layers[idn].bits_a))
+
+    def _moe_unit(self, unit: _Unit, x_q):
+        router_logits = self._run_layer(unit.idxs[0], x_q)
+        experts, shared = [], None
+        for j in range(1, len(unit.idxs), 3):
+            triple = unit.idxs[j:j + 3]
+            if ".mlp.shared." in self.layers[triple[0]].name:
+                shared = triple
+            else:
+                experts.append(triple)
+        # the compiled program carries the top_k routed experts as
+        # static layers e0..e{k-1} (the compute that fires per token);
+        # weight them by the router's softmax renormalized over them
+        w = jax.nn.softmax(router_logits, axis=-1)[:, :len(experts)]
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        out = jnp.zeros((self.spec.batch, self.spec.d_model), jnp.float32)
+        for e, triple in enumerate(experts):
+            out = out + w[:, e:e + 1] * self._mlp(triple, x_q)
+        if shared is not None:
+            out = out + self._mlp(shared, x_q)
+        return out
+
+    def _attn_unit(self, u_i: int, unit: _Unit, x_q, pos: int):
+        iq, ik, iv, io = unit.idxs
+        q = self._run_layer(iq, x_q)
+        k = self._run_layer(ik, x_q)
+        v = self._run_layer(iv, x_q)
+        c = self._caches[u_i]
+        bits_kv = self.layers[ik].bits_a
+        kq, ks = _quant_with_scale(k, bits_kv)
+        vq, vs = _quant_with_scale(v, bits_kv)
+        c["k"] = self._cache_set(c["k"], kq, pos)
+        c["v"] = self._cache_set(c["v"], vq, pos)
+        c["ks"] = c["ks"].at[pos].set(ks)
+        c["vs"] = c["vs"].at[pos].set(vs)
+        ctx = self._attn_ctx(q, c, pos)
+        return self._run_layer(io, requantize(ctx, self.layers[io].bits_a))
+
+    def _attn_ctx(self, q, cache, pos: int):
+        """Causal GQA softmax attention over the coded KV cache."""
+        spec = self.spec
+        B, hq, hkv, hd = spec.batch, spec.n_heads, spec.n_kv_heads, \
+            spec.head_dim
+        S = cache["k"].shape[0]
+        kf = cache["k"].astype(jnp.float32) * cache["ks"][:, None, None]
+        vf = cache["v"].astype(jnp.float32) * cache["vs"][:, None, None]
+        qh = q.reshape(B, hq, hd)
+        kh = jnp.repeat(kf.reshape(S, B, hkv, hd), hq // hkv, axis=2)
+        vh = jnp.repeat(vf.reshape(S, B, hkv, hd), hq // hkv, axis=2)
+        scores = jnp.einsum("bhd,sbhd->bhs", qh, kh) / math.sqrt(hd)
+        mask = (jnp.arange(S) <= pos)[None, None, :]
+        weights = jax.nn.softmax(
+            jnp.where(mask, scores, -jnp.inf), axis=-1)
+        ctx = jnp.einsum("bhs,sbhd->bhd", weights, vh)
+        return ctx.reshape(B, hq * hd)
+
+    def _ssm_unit(self, u_i: int, unit: _Unit, x_q):
+        """Gated diagonal recurrence over the persistent fp32 state —
+        the in-place-updated analogue of the ``state`` segment the
+        decode decoration allocates (batch x d_inner x 4 bytes)."""
+        izx, ibc, idt, iout = unit.idxs
+        zx = self._run_layer(izx, x_q)
+        bc = self._run_layer(ibc, x_q)
+        dt = self._run_layer(idt, x_q)
+        d_inner = self.layers[iout].dims.k
+        z, xin = zx[:, :d_inner], zx[:, d_inner:]
+        decay = jnp.repeat(jax.nn.sigmoid(dt), d_inner // dt.shape[1],
+                           axis=1)
+        state = self._caches[u_i]["state"]
+        state = decay * state + (1.0 - decay) * jax.nn.silu(xin)
+        self._caches[u_i]["state"] = state
+        gate = 1.0 + jnp.tanh(jnp.mean(bc, axis=-1, keepdims=True))
+        y = state * jax.nn.silu(z) * gate
+        return self._run_layer(iout, requantize(y, self.layers[iout].bits_a))
+
+    def _cache_set(self, cache, row, pos: int):
+        return cache.at[pos].set(row)
+
+    # -- subclass hooks ----------------------------------------------------
+
+    def _run_layer(self, index: int, x_q) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def bind_layer(self, index: int, w_lut=None, s_lut=None,
+                   w_dsp=None, s_dsp=None) -> None:
+        raise NotImplementedError
+
+
+class ReferenceSession(DecodeSession):
+    """The plain-jax ``decode_step`` reference for a compiled decode
+    program: whole-layer reference GEMMs (``kernels/ref.py`` bit-serial
+    + packed-int4 numerics — no tiling, no instruction walk) through
+    the shared glue. The oracle every ExecutorSession must match
+    bit-exactly."""
+
+    session_name = "ref"
+
+    def __init__(self, program, tracer=None):
+        self._weights: dict[int, LayerWeights] = {}
+        super().__init__(program.layers, program.step, program.name,
+                         tracer)
+
+    def bind_layer(self, index, w_lut=None, s_lut=None,
+                   w_dsp=None, s_dsp=None) -> None:
+        as_w = (lambda w, s: (jnp.asarray(w, jnp.int32),
+                              jnp.asarray(s, jnp.float32).reshape(-1)))
+        wl, sl = as_w(w_lut, s_lut) if w_lut is not None else (None, None)
+        wd, sd = as_w(w_dsp, s_dsp) if w_dsp is not None else (None, None)
+        self._weights[index] = LayerWeights(wl, sl, wd, sd)
+
+    def _run_layer(self, index, x_q):
+        lp = self.layers[index]
+        wts = self._weights[index]
+        x = jnp.asarray(x_q, jnp.int8)
+        outs = []
+        if wts.w_lut is not None:
+            outs.append(kref.bitserial_gemm_ref(
+                x, wts.w_lut, wts.s_lut, lp.bits_w_lut))
+        if wts.w_dsp is not None:
+            outs.append(kops.int4_matmul(
+                x, wts.w_dsp, wts.s_dsp, mode="ref"))
+        return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_step_ref(program, tracer=None) -> ReferenceSession:
+    """Convenience constructor for the plain-jax decode reference."""
+    return ReferenceSession(program, tracer=tracer)
+
+
+class ExecutorSession(DecodeSession):
+    """Decode session over compiled backends: bind weights once, then
+    ``step(token, pos)`` repeatedly.
+
+    ``program`` is a decode-decorated
+    :class:`~repro.compiler.program.Program` (or a decorated
+    ``MultiDeviceProgram`` bundle — the session then drives a
+    ``MultiDeviceExecutor`` per phase). The first step executes the
+    warm-up program (weight DMAs included); later steps execute the
+    steady-state variant (``compiler/lower.py steady_program``) whose
+    weight fetches are elided — on the golden backend the contract
+    checks verify the steady program touches no weight segment.
+
+    Each step is measured as an ``exec.<backend>.step`` tracer span
+    tagged ``phase=warmup|steady``, so ``--profile`` separates the two
+    regimes; ``serve.decode.tokens`` counts steps in ``obs.METRICS``.
+    """
+
+    def __init__(self, program, backend: str | type = "golden",
+                 tracer=None, **backend_kwargs):
+        from repro.compiler.partition import (MultiDeviceProgram,
+                                              steady_bundle)
+        from repro.compiler.lower import steady_program
+        if isinstance(program, MultiDeviceProgram):
+            from repro.compiler.runtime.multi import MultiDeviceExecutor
+            spec = program.devices[0].step
+            if spec is None:
+                raise ExecutionError(
+                    f"{program.name}: bundle is not decode-decorated "
+                    f"(partition.decorate_decode_bundle)")
+            self.steady = steady_bundle(program)
+            self._warm_ex = MultiDeviceExecutor(
+                program, backend=backend, tracer=tracer, **backend_kwargs)
+            self._steady_ex = MultiDeviceExecutor(
+                self.steady, backend=backend, tracer=tracer,
+                **backend_kwargs)
+            bname = backend if isinstance(backend, str) else backend.name
+            self.session_name = f"multi.{bname}"
+            layers = self._warm_ex.layers
+        else:
+            from repro.compiler.runtime import get_backend
+            spec = program.step
+            self.steady = steady_program(program)
+            cls = get_backend(backend) if isinstance(backend, str) \
+                else backend
+            self._warm_ex = cls(program, tracer=tracer, **backend_kwargs)
+            self._steady_ex = cls(self.steady, tracer=tracer,
+                                  **backend_kwargs)
+            self.session_name = self._warm_ex.name
+            layers = program.layers
+        self.warm = program
+        self._warmed = False
+        super().__init__(layers, spec, program.name, tracer)
+
+    def bind_layer(self, index, w_lut=None, s_lut=None,
+                   w_dsp=None, s_dsp=None) -> None:
+        """Bind one layer's weights on both program variants (the
+        steady program reuses the resident tiles the warm-up loaded)."""
+        for ex in (self._warm_ex, self._steady_ex):
+            ex.bind_layer(index, w_lut=w_lut, s_lut=s_lut,
+                          w_dsp=w_dsp, s_dsp=s_dsp)
+
+    def step(self, token, pos: int | None = None) -> jnp.ndarray:
+        from repro.obs import METRICS
+        pos = self.pos if pos is None else int(pos)
+        phase = "steady" if self._warmed else "warmup"
+        with self.tracer.measure(f"exec.{self.session_name}.step",
+                                 self.program_name, pos=pos, phase=phase):
+            logits = super().step(token, pos)
+        self._warmed = True
+        METRICS.incr("serve.decode.tokens")
+        return logits
+
+    def _run_layer(self, index, x_q):
+        ex = self._steady_ex if self._warmed else self._warm_ex
+        return ex.run_layer(index, x_q)
+
+    def _cache_set(self, cache, row, pos: int):
+        # pallas path: donate the previous buffer so the cache is
+        # updated in place device-side across the whole session
+        if "pallas" in self.session_name:
+            return _donated_append(cache, row, jnp.int32(pos))
+        return cache.at[pos].set(row)

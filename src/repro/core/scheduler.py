@@ -408,6 +408,50 @@ class ProgramSim:
         return agg
 
 
+@dataclasses.dataclass
+class DecodeSim:
+    """Decode-mode timing of a step program (``Program.step`` set).
+
+    One generated token costs ``warmup_cycles`` on the first invocation
+    (weights stream in from DDR) and ``steady_cycles`` afterwards (the
+    ``weights``-resident segments stay on chip; only the new token's
+    activations and the persistent kv/state rows move). ``total_cycles``
+    is the warm-up invocation so fixed-seq comparisons stay meaningful;
+    :meth:`tokens_cycles` scores an ``n``-token generation.
+    """
+    warmup: ProgramSim
+    steady: ProgramSim
+
+    @property
+    def warmup_cycles(self) -> int:
+        return self.warmup.total_cycles
+
+    @property
+    def steady_cycles(self) -> int:
+        return self.steady.total_cycles
+
+    @property
+    def total_cycles(self) -> int:
+        return self.warmup.total_cycles
+
+    def tokens_cycles(self, n_tokens: int) -> int:
+        """Cycles to generate ``n_tokens`` (warm-up + steady steps)."""
+        return (self.warmup_cycles
+                + max(0, n_tokens - 1) * self.steady_cycles)
+
+    # ProgramSim-compatible surface (reports describe the warm-up pass)
+    @property
+    def layers(self) -> list[LayerSim]:
+        return self.warmup.layers
+
+    @property
+    def n_instructions(self) -> int:
+        return self.warmup.n_instructions
+
+    def decomposition(self, core: str) -> dict[str, int]:
+        return self.warmup.decomposition(core)
+
+
 def simulate_layers(prog, collect_traces: bool = False) -> list[LayerSim]:
     """Event-driven sim of every layer of a single-device program.
 
@@ -500,6 +544,21 @@ def simulate_program(prog, opt_level: int | None = None,
     if opt_level is not None:
         from repro.compiler.passes import optimize_program
         prog = optimize_program(prog, opt_level, validate=False)
+    if getattr(prog, "step", None) is not None:
+        # decode-mode step program: report warm-up vs steady state; the
+        # trace lays the two invocations back to back on the timeline
+        from repro.compiler.lower import steady_program
+        steady = steady_program(prog)
+        warm = ProgramSim(simulate_layers(prog, collect_traces=tracing))
+        ssim = ProgramSim(simulate_layers(steady, collect_traces=tracing))
+        ds = DecodeSim(warmup=warm, steady=ssim)
+        if tracing:
+            end = record_program_trace(tracer, 0, prog.device.name, prog,
+                                       warm.layers)
+            end = record_program_trace(tracer, 0, prog.device.name, steady,
+                                       ssim.layers, offset=end)
+            tracer.set_makespan(end)
+        return ds
     ps = ProgramSim(simulate_layers(prog, collect_traces=tracing))
     if tracing:
         record_program_trace(tracer, 0, prog.device.name, prog, ps.layers)

@@ -42,7 +42,13 @@ from repro.serve.engine import make_cache, make_decode_fn, make_prefill_fn
 
 @dataclasses.dataclass(frozen=True)
 class ProgramKey:
-    """Full compile identity of a servable accelerator program."""
+    """Full compile identity of a servable accelerator program.
+
+    ``mode="fixed"`` is the classic fixed-sequence program;
+    ``mode="decode"`` is the decode-resident step program (weights
+    resident across invocations, KV/state segments persistent), keyed
+    additionally by ``batch`` and ``max_seq``.
+    """
     arch: str
     device: str = "XC7Z020"
     bits_w: int = 4
@@ -52,6 +58,9 @@ class ProgramKey:
     seq_len: int = 64
     devices: int = 1
     partition: str | None = None
+    mode: str = "fixed"
+    batch: int = 1
+    max_seq: int = 0
 
 
 class ProgramCache:
@@ -94,12 +103,21 @@ class ProgramCache:
 
     @staticmethod
     def _compile(key: ProgramKey) -> bytes:
-        from repro.compiler import (asm, compile_network)
-        prog = compile_network(
-            key.arch, device=key.device, bits_w=key.bits_w,
-            bits_a=key.bits_a, ratio=key.ratio, seq_len=key.seq_len,
-            opt_level=key.opt_level, devices=key.devices,
-            partition=key.partition)
+        from repro.compiler import (asm, compile_decode_network,
+                                    compile_network)
+        if key.mode == "decode":
+            prog = compile_decode_network(
+                key.arch, batch=key.batch,
+                max_seq=key.max_seq or key.seq_len, device=key.device,
+                bits_w=key.bits_w, bits_a=key.bits_a, ratio=key.ratio,
+                opt_level=key.opt_level, devices=key.devices,
+                partition=key.partition)
+        else:
+            prog = compile_network(
+                key.arch, device=key.device, bits_w=key.bits_w,
+                bits_a=key.bits_a, ratio=key.ratio, seq_len=key.seq_len,
+                opt_level=key.opt_level, devices=key.devices,
+                partition=key.partition)
         if hasattr(prog, "devices"):
             return asm.to_bundle_binary(prog)
         return asm.to_binary(prog)
@@ -143,6 +161,14 @@ def main() -> None:
     ap.add_argument("--accel-partition", choices=("pipeline", "filter"),
                     default=None,
                     help="partition plan for --accel-devices > 1")
+    ap.add_argument("--accel-backend", choices=("golden", "pallas"),
+                    default="golden",
+                    help="executor backend for the compiled decode "
+                         "session demo (--quantize path)")
+    ap.add_argument("--accel-decode-tokens", type=int, default=4,
+                    help="tokens to generate through the compiled "
+                         "decode-resident session (--quantize path; "
+                         "0 disables the session demo)")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="export the run's metrics registry (.json or "
                          ".csv) on exit")
@@ -218,6 +244,38 @@ def main() -> None:
             print(f"# accel program {image[:8].decode()} "
                   f"{len(image)} B in {t_img * 1e3:.1f} ms "
                   f"(cache {PROGRAM_CACHE.info()})")
+            # decode-resident step image for the same serving config
+            # (weights resident, KV persistent) + a live session demo
+            dkey = dataclasses.replace(
+                key, mode="decode", batch=1,
+                max_seq=min(max_seq, 16), bits_a=4)
+            dimage = compiled_program_image(dkey)
+            print(f"# accel decode program {dimage[:8].decode()} "
+                  f"{len(dimage)} B (batch={dkey.batch} "
+                  f"max_seq={dkey.max_seq})")
+            if args.accel_decode_tokens > 0:
+                from repro.serve.engine import (greedy_generate_compiled,
+                                                make_compiled_session)
+                session = make_compiled_session(
+                    args.arch, backend=args.accel_backend, batch=1,
+                    max_seq=dkey.max_seq, bits_w=args.w_bits,
+                    seed=args.seed)
+                s0 = min(4, dkey.max_seq - args.accel_decode_tokens)
+                t0 = time.time()
+                toks = greedy_generate_compiled(
+                    session, prompts[:1, :s0], args.accel_decode_tokens)
+                n_steps = s0 + args.accel_decode_tokens - 1
+                t_sess = time.time() - t0
+                warm = METRICS.snapshot()["gauges"].get(
+                    "serve.decode.warmup_cycles", 0)
+                steady = METRICS.snapshot()["gauges"].get(
+                    "serve.decode.steady_cycles", 0)
+                print(f"# accel decode session [{args.accel_backend}]: "
+                      f"{n_steps} steps in {t_sess * 1e3:.1f} ms "
+                      f"({n_steps / max(t_sess, 1e-9):.1f} tok/s host), "
+                      f"sim {warm:.0f} warm-up / {steady:.0f} steady "
+                      f"cycles/token, tokens "
+                      f"{list(map(int, toks[0, s0:]))}")
         print(f"# arch={arch.model.name} quantized={args.quantize}")
         print(f"prefill: {t_prefill * 1e3:8.1f} ms "
               f"({args.batch * args.prompt_len / max(t_prefill, 1e-9):.0f} tok/s)")

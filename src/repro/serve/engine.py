@@ -102,10 +102,17 @@ def greedy_generate(arch: ArchConfig, params: Any, prompts: jax.Array,
 
     recurrent = arch.module in ("ssm", "hybrid")
     out = [prompts]
-    if recurrent or arch.module == "lm":
-        # feed prompt through decode steps (lm could use prefill; the
-        # uniform path keeps this reference loop simple)
-        tok = None
+    if arch.module == "lm":
+        # real prefill: one call scores the whole prompt and fills the
+        # KV cache (S0 single-token steps would re-pay the attention
+        # window per token for nothing)
+        prefill_fn = jax.jit(make_prefill_fn(arch, rules))
+        logits, cache = prefill_fn(params, {"tokens": prompts}, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        pos = s0
+    elif recurrent:
+        # the recurrent families build state token-by-token: their
+        # prefill scores the prompt but does not advance the state
         for t in range(s0):
             logits, cache = decode_fn(params, prompts[:, t:t + 1], cache,
                                       jnp.int32(t))
@@ -122,3 +129,74 @@ def greedy_generate(arch: ArchConfig, params: Any, prompts: jax.Array,
         new.append(tok)
         pos += 1
     return jnp.concatenate(out + new, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Compiled (quantized) serving path: decode-resident executor sessions
+# ---------------------------------------------------------------------------
+
+
+def make_compiled_session(arch_id: str, *, backend: str = "golden",
+                          batch: int = 1, max_seq: int = 64,
+                          bits_w: int = 4, bits_a: int = 4,
+                          opt_level: int = 1, device: str = "XC7Z020",
+                          seed: int | None = None, tracer=None):
+    """Build a decode-resident :class:`~repro.compiler.runtime.session.
+    ExecutorSession` for a registry arch: compile the decode step
+    program (weights resident, KV/state persistent), bind synthetic
+    quantized weights once, and report the simulator's warm-up vs
+    steady-state step cycles into ``obs.METRICS``
+    (``serve.decode.warmup_cycles`` / ``serve.decode.steady_cycles``).
+    """
+    from repro.obs import METRICS
+    from repro.core.scheduler import simulate_program
+    from repro.compiler import compile_decode_network
+    from repro.compiler.runtime import ExecutorSession
+    prog = compile_decode_network(arch_id, batch=batch, max_seq=max_seq,
+                                  bits_w=bits_w, bits_a=bits_a,
+                                  opt_level=opt_level, device=device)
+    ds = simulate_program(prog)
+    METRICS.gauge("serve.decode.warmup_cycles", ds.warmup_cycles)
+    METRICS.gauge("serve.decode.steady_cycles", ds.steady_cycles)
+    session = ExecutorSession(prog, backend=backend, tracer=tracer)
+    session.bind_synthetic_all(seed=seed)
+    return session
+
+
+def make_compiled_decode_fn(session) -> Callable:
+    """Adapt an ``ExecutorSession`` to the uniform decode signature.
+    ``params`` and ``cache`` pass through untouched — the session owns
+    the resident weights and the live cache buffers."""
+    def decode_fn(params, token, cache, pos):
+        logits = session.step(jnp.asarray(token, jnp.int32).reshape(-1),
+                              int(pos))
+        return logits, cache
+    return decode_fn
+
+
+def greedy_generate_compiled(session, prompts: jax.Array,
+                             n_new: int) -> jax.Array:
+    """Greedy generation through a compiled decode session: the prompt
+    is consumed step by step (warm-up program on the first token,
+    steady-state program after), then ``n_new`` greedy tokens follow —
+    every step against the session's resident weights and live caches.
+    """
+    prompts = jnp.asarray(prompts, jnp.int32)
+    b, s0 = prompts.shape
+    if b != session.spec.batch:
+        raise ValueError(f"session is compiled for batch="
+                         f"{session.spec.batch}, prompts have {b}")
+    if s0 + n_new > session.spec.max_seq:
+        raise ValueError(f"{s0} prompt + {n_new} new tokens exceed the "
+                         f"session's max_seq={session.spec.max_seq}")
+    session.reset()
+    logits = None
+    for t in range(s0):
+        logits = session.step(prompts[:, t], t)
+    new = []
+    for i in range(n_new):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new.append(tok[:, None])
+        if i + 1 < n_new:
+            logits = session.step(tok, s0 + i)
+    return jnp.concatenate([prompts] + new, axis=1)

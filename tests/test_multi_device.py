@@ -201,15 +201,38 @@ def test_bundle_binary_rejects_garbage():
 
 def test_gather_dma_offsets_are_staging_ordinals():
     # a device's gather fetches index the staged peer shards 0..D-2 in
-    # device order, not raw peer ids (segment-relative convention)
+    # device order, not raw peer ids (segment-relative convention);
+    # the overlap placement rides them at the *producing* layer's
+    # fetch-stream tail (every layer but the last)
     mdp = _chain_bundle("filter", 3)
     for prog in mdp.devices:
-        for lp in prog.layers[1:]:
+        for lp in prog.layers[:-1]:
             cp = lp.lut if lp.lut is not None else lp.dsp
             offs = [op.instr.ddr_offset for op in cp.streams["fetch"]
                     if isinstance(op.instr, isa.FetchInstr)
                     and op.instr.stage_ctrl == 3]
             assert offs == [0, 1]
+        last = prog.layers[-1]
+        cp = last.lut if last.lut is not None else last.dsp
+        assert not any(isinstance(op.instr, isa.FetchInstr)
+                       and op.instr.stage_ctrl == 3
+                       for op in cp.streams["fetch"])
+
+
+def test_gather_overlap_beats_serialized_gathers():
+    # the overlap placement strictly shortens the filter-parallel
+    # makespan: link DMAs ride under the producing layer's compute
+    # instead of serializing at the consuming layer's head
+    layers = CHAIN
+    plan = derive_plan(layers, 2, "filter")
+    over = lower_partitioned("toy", layers, plan, LUT, DSP, XC7Z020,
+                             bits_w_lut=6, bits_a=4)
+    serial = lower_partitioned("toy", layers, plan, LUT, DSP, XC7Z020,
+                               bits_w_lut=6, bits_a=4,
+                               gather_overlap=False)
+    c_over = simulate_program(over).latency_cycles
+    c_serial = simulate_program(serial).latency_cycles
+    assert c_over < c_serial
 
 
 def test_boundary_bytes_use_consumer_bits():
