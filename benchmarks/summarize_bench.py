@@ -1,0 +1,105 @@
+"""Render bench-row CSVs as a markdown summary table.
+
+Every benchmark in this repo emits rows of ``name, microseconds,
+{"BENCH": kind, ...}`` (see ``compiler_bench.py``); CI used to carry
+an inline heredoc that pretty-printed them into
+``$GITHUB_STEP_SUMMARY``. That table lives here now — one ``describe``
+dispatch per row kind — so adding a bench kind means editing this file
+(unit-tested) instead of the workflow.
+
+  PYTHONPATH=src python benchmarks/summarize_bench.py bench.csv \
+      --title "compiler bench (smoke)" >> "$GITHUB_STEP_SUMMARY"
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import sys
+
+
+def describe(kind: str, b: dict, us: float) -> str:
+    """One-line key-metrics summary for a bench row's BENCH blob."""
+    if kind == "compiler":
+        return (f"{b['layers']} layers, {b['instructions']} instrs "
+                f"(-O1 {b['instructions_o1']}), "
+                f"{b.get('sim_latency_gain_pct', '-')}% sim gain")
+    elif kind == "compiler.backends":
+        return (f"golden {b['golden_s']}s vs pallas {b['pallas_s']}s "
+                f"({b['speedup_x']}x), bit_exact={b['bit_exact']}")
+    elif kind == "compiler.cnn_execute":
+        return (f"e2e @{b['in_hw']}px: {b['layers']} layers "
+                f"({b['depthwise_layers']} depthwise), "
+                f"pallas {b['pallas_s']}s, "
+                f"bit_exact={b.get('bit_exact', '-')}")
+    elif kind == "compiler.multi_device":
+        p2 = b["plans"]["pipeline_x2"]
+        return (f"pipeline_x2 {p2['speedup_x']}x vs 1 device "
+                f"(beats: {b['pipeline_x2_beats_1dev']})")
+    elif kind == "obs.overhead":
+        return (f"tracer on {b['sim_on_s']}s vs off {b['sim_off_s']}s "
+                f"({b['overhead_pct']}% overhead, "
+                f"{b['trace_events']} events, "
+                f"closure_ok={b['closure_ok']})")
+    elif kind == "kernels.fused":
+        return (f"fused {b['fused_s']}s vs split {b['split_s']}s "
+                f"({b['speedup_x']}x), launches "
+                f"{b['launches_fused']} vs {b['launches_split']}, "
+                f"col staging -{b['col_staging_bytes_removed']}B, "
+                f"bit_exact={b['bit_exact']}")
+    elif kind == "dse.sim_gap":
+        return (f"analytical {b['analytical_ms']}ms vs simulated "
+                f"{b['simulated_ms']}ms (gap {b['gap_pct']}%, "
+                f"within_tol={b['within_tol']})")
+    elif kind == "compiler.gather_overlap":
+        return (f"filter_x2 gather overlap {b['latency_overlap']} "
+                f"vs serialized {b['latency_serialized']} cycles "
+                f"(-{b['gain_pct']}%)")
+    elif kind == "serve.decode":
+        return (f"{b['family']}: steady {b['steady_cycles']} "
+                f"cycles/token vs naive re-run "
+                f"{b['naive_fixed_seq_cycles_per_token']} "
+                f"({b['resident_vs_naive_x']}x), warm-up "
+                f"{b['warmup_cycles']}, "
+                f"{b['host_tok_per_s']} tok/s host")
+    elif kind == "serve.fleet":
+        return (f"{b['policy']}: {b['req_per_s']} req/s "
+                f"({b['completed']}/{b['requests']} ok, "
+                f"{b['failed']} failed), p50 {b['p50_ms']}ms / "
+                f"p99 {b['p99_ms']}ms, {b['workers']} workers "
+                f"util {b['utilization_pct']}%, "
+                f"bit_exact={b['bit_exact']}")
+    elif kind == "serve.fleet.compare":
+        return (f"continuous {b['continuous_req_per_s']} vs serial "
+                f"{b['serial_req_per_s']} req/s "
+                f"({b['speedup_x']}x, "
+                f"beats={b['continuous_beats_serial']})")
+    else:
+        return f"{float(us) / 1e6:.2f}s"
+
+
+def summarize(rows, title: str = "bench") -> str:
+    """Markdown table over ``(name, microseconds, blob)`` rows."""
+    lines = [f"### {title}", "", "| row | key metrics |", "| --- | --- |"]
+    for name, us, blob in rows:
+        b = json.loads(blob)
+        lines.append(
+            f"| `{name}` | {describe(b.get('BENCH', ''), b, us)} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="render bench-row CSVs as a markdown table")
+    ap.add_argument("csv", nargs="+", help="bench CSV file(s)")
+    ap.add_argument("--title", default="bench")
+    args = ap.parse_args(argv)
+    rows = []
+    for path in args.csv:
+        with open(path, newline="") as fh:
+            rows.extend(r for r in csv.reader(fh) if r)
+    sys.stdout.write(summarize(rows, args.title))
+
+
+if __name__ == "__main__":
+    main()

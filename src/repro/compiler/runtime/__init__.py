@@ -26,17 +26,19 @@ from repro.compiler.runtime.base import (
     chain_layers,
     im2col_patches,
     requantize,
+    requantize_rows,
     spatialize,
     synthetic_weights,
 )
 from repro.compiler.runtime.golden import GoldenExecutor
-from repro.compiler.runtime.multi import MultiDeviceExecutor
+from repro.compiler.runtime.multi import MultiDeviceExecutor, global_layers
 from repro.compiler.runtime.pallas import PallasExecutor
 from repro.compiler.runtime.session import (
     DecodeSession,
     ExecutorSession,
     ReferenceSession,
     decode_step_ref,
+    synthetic_decode_arrays,
 )
 
 BACKENDS: dict[str, type[ExecutorBackend]] = {
@@ -60,6 +62,7 @@ __all__ = [
     "ExecutorSession", "GoldenExecutor", "LayerWeights",
     "MultiDeviceExecutor", "PallasExecutor", "ReferenceSession",
     "apply_pool", "bind_synthetic", "chain_layers", "decode_step_ref",
-    "get_backend", "im2col_patches", "requantize", "spatialize",
+    "get_backend", "global_layers", "im2col_patches", "requantize",
+    "requantize_rows", "spatialize", "synthetic_decode_arrays",
     "synthetic_weights",
 ]

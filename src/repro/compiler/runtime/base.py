@@ -271,6 +271,23 @@ def requantize(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8)
 
 
+def requantize_rows(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Row-independent twin of :func:`requantize`: one max-abs scale
+    per batch row instead of per tensor.
+
+    For a single-row input the scale reduction sees exactly the same
+    elements as the per-tensor path, so the two are bit-identical at
+    batch 1 — which is what lets slot-batched serving
+    (``DecodeSession.step_slots``) mix unrelated requests in one batch
+    while each slot stays bit-exact against a dedicated batch-1
+    session.
+    """
+    lo, hi = qrange(bits)
+    s_a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
+                      1e-8) / hi
+    return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8)
+
+
 def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
     """Chain ``layers`` through ``run_layer(index, x_q)`` with the
     inter-layer requantization the hardware applies on write-back.

@@ -54,6 +54,47 @@ class GlobalLayer:
     geometry: ConvGeometry | None = None
 
 
+def global_layers(bundle) -> list[GlobalLayer]:
+    """Build the full-network layer table for a bundle: un-sharded
+    extents plus per-device placements. Shared by
+    :class:`MultiDeviceExecutor` and the serving fleet (which shards
+    full-layer weights onto remote workers without instantiating local
+    executors)."""
+    plan = bundle.plan
+    out = []
+    for gi in range(bundle.n_layers):
+        owners = bundle.placements(gi)
+        if plan.kind == "pipeline":
+            d, li = owners[0]
+            lp = bundle.devices[d].layers[li]
+            placements = ((d, li, 0, lp.dims.n),)
+            dims, n_lut = lp.dims, lp.n_lut
+            geom = lp.geometry
+        else:
+            bounds = plan.shards[gi]
+            placements = tuple((d, li, bounds[d], bounds[d + 1])
+                               for d, li in owners)
+            first = bundle.devices[0].layers[gi]
+            dims = GemmDims(first.dims.m, first.dims.k, bounds[-1])
+            n_lut = sum(bundle.devices[d].layers[li].n_lut
+                        for d, li in owners)
+            lp = first
+            # un-shard the conv geometry: device programs carry the
+            # local filter shard's channel counts
+            geom = lp.geometry
+            if geom is not None:
+                n = bounds[-1]
+                geom = dataclasses.replace(
+                    geom, c_out=n,
+                    c_in=n if lp.depthwise else geom.c_in)
+        out.append(GlobalLayer(
+            index=gi, name=lp.name, dims=dims, n_lut=n_lut,
+            bits_w_lut=lp.bits_w_lut, bits_a=lp.bits_a,
+            depthwise=lp.depthwise, placements=placements,
+            geometry=geom))
+    return out
+
+
 class MultiDeviceExecutor:
     """Functional executor over a compiled multi-device bundle."""
 
@@ -71,44 +112,7 @@ class MultiDeviceExecutor:
         # per-device executors share the bundle's measured timeline
         self.executors = [cls(p, tracer=tracer, **backend_kwargs)
                           for p in bundle.devices]
-        self.layers = self._global_layers()
-
-    # -- global layer table -------------------------------------------------
-
-    def _global_layers(self) -> list[GlobalLayer]:
-        plan = self.bundle.plan
-        out = []
-        for gi in range(self.bundle.n_layers):
-            owners = self.bundle.placements(gi)
-            if plan.kind == "pipeline":
-                d, li = owners[0]
-                lp = self.bundle.devices[d].layers[li]
-                placements = ((d, li, 0, lp.dims.n),)
-                dims, n_lut = lp.dims, lp.n_lut
-                geom = lp.geometry
-            else:
-                bounds = plan.shards[gi]
-                placements = tuple((d, li, bounds[d], bounds[d + 1])
-                                   for d, li in owners)
-                first = self.bundle.devices[0].layers[gi]
-                dims = GemmDims(first.dims.m, first.dims.k, bounds[-1])
-                n_lut = sum(self.bundle.devices[d].layers[li].n_lut
-                            for d, li in owners)
-                lp = first
-                # un-shard the conv geometry: device programs carry the
-                # local filter shard's channel counts
-                geom = lp.geometry
-                if geom is not None:
-                    n = bounds[-1]
-                    geom = dataclasses.replace(
-                        geom, c_out=n,
-                        c_in=n if lp.depthwise else geom.c_in)
-            out.append(GlobalLayer(
-                index=gi, name=lp.name, dims=dims, n_lut=n_lut,
-                bits_w_lut=lp.bits_w_lut, bits_a=lp.bits_a,
-                depthwise=lp.depthwise, placements=placements,
-                geometry=geom))
-        return out
+        self.layers = global_layers(bundle)
 
     # -- weight binding ------------------------------------------------------
 

@@ -48,6 +48,7 @@ from repro.compiler.runtime.base import (
     ExecutionError,
     LayerWeights,
     requantize,
+    requantize_rows,
     synthetic_weights,
 )
 
@@ -110,6 +111,43 @@ def _quant_with_scale(x: jnp.ndarray, bits: int):
     return jnp.clip(jnp.round(x / s), lo, hi).astype(jnp.int8), s
 
 
+def _quant_rows_with_scale(x: jnp.ndarray, bits: int):
+    """Per-row twin of :func:`_quant_with_scale` (one scale per batch
+    row, bit-identical to it at batch 1) for per-slot KV appends."""
+    _, hi = qrange(bits)
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / hi
+    lo, hi_q = qrange(bits)
+    q = jnp.clip(jnp.round(x / s[:, None]), lo, hi_q).astype(jnp.int8)
+    return q, s
+
+
+def synthetic_decode_arrays(layers, spec, seed: int | None = None
+                            ) -> dict:
+    """The exact arrays :meth:`DecodeSession.bind_synthetic_all` binds,
+    as a flat name->ndarray dict (``L{i}.w_lut`` / ``L{i}.s_lut`` /
+    ``L{i}.w_dsp`` / ``L{i}.s_dsp`` + ``embed``).
+
+    One generation path shared by in-process binding and the serving
+    fleet's wire shipping (``serve/protocol.pack_arrays``), so every
+    worker binds byte-identical weight segments.
+    """
+    out: dict = {}
+    for lp in layers:
+        w_lut, s_lut, w_dsp, s_dsp = synthetic_weights(
+            lp.index, lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut,
+            lp.bits_w_lut, None if seed is None else seed + lp.index)
+        for name, arr in (("w_lut", w_lut), ("s_lut", s_lut),
+                          ("w_dsp", w_dsp), ("s_dsp", s_dsp)):
+            if arr is not None:
+                out[f"L{lp.index}.{name}"] = np.asarray(arr)
+    bits = layers[0].bits_a
+    vocab = layers[-1].dims.n
+    rng = np.random.default_rng(10_000 + (seed or 0))
+    lo, hi = qrange(bits)
+    out["embed"] = rng.integers(lo, hi + 1, (vocab, spec.d_model))
+    return out
+
+
 class DecodeSession:
     """Shared decode-step state machine (glue + caches + embedding).
 
@@ -136,31 +174,63 @@ class DecodeSession:
         self.program_name = name
         self.units = _block_plan(self.layers)
         self.pos = 0
+        self.per_slot = False
         self._embed_table = None
         self._caches: dict[int, dict[str, jnp.ndarray]] = {}
         self.reset()
 
     # -- session state -----------------------------------------------------
 
-    def reset(self) -> None:
+    def reset(self, per_slot: bool | None = None) -> None:
         """Clear the KV caches / SSM states and rewind to position 0.
-        Bound weights stay resident (a new sequence, not a new model)."""
+        Bound weights stay resident (a new sequence, not a new model).
+
+        ``per_slot=True`` switches the session to slot-batched serving:
+        the KV quant scales become per-slot (``[max_seq, batch]``
+        instead of ``[max_seq]``) so each batch row can hold an
+        unrelated request at its own position (:meth:`step_slots`),
+        with :meth:`reset_slot` recycling one row for a new request.
+        """
+        if per_slot is not None:
+            self.per_slot = bool(per_slot)
         S, B = self.spec.max_seq, self.spec.batch
         self.pos = 0
         self._caches = {}
+        scale_shape = (S, B) if self.per_slot else (S,)
         for u_i, unit in enumerate(self.units):
             if unit.kind == "attn":
                 n_kv = self.layers[unit.idxs[1]].dims.n
                 self._caches[u_i] = {
                     "k": jnp.zeros((S, B, n_kv), jnp.int8),
                     "v": jnp.zeros((S, B, n_kv), jnp.int8),
-                    "ks": jnp.zeros((S,), jnp.float32),
-                    "vs": jnp.zeros((S,), jnp.float32),
+                    "ks": jnp.zeros(scale_shape, jnp.float32),
+                    "vs": jnp.zeros(scale_shape, jnp.float32),
                 }
             elif unit.kind == "ssm":
                 d_inner = self.layers[unit.idxs[3]].dims.k
                 self._caches[u_i] = {
                     "state": jnp.zeros((B, d_inner), jnp.float32)}
+
+    def reset_slot(self, slot: int) -> None:
+        """Recycle one batch row for a newly admitted request: zero its
+        KV cache columns, quant scales and SSM state rows. The other
+        slots' in-flight requests are untouched (continuous batching
+        admits at step boundaries without draining the batch)."""
+        if not self.per_slot:
+            raise ExecutionError(
+                "reset_slot needs per-slot mode (reset(per_slot=True))")
+        if not 0 <= slot < self.spec.batch:
+            raise ExecutionError(
+                f"slot {slot} outside [0, {self.spec.batch})")
+        for u_i, unit in enumerate(self.units):
+            c = self._caches.get(u_i)
+            if unit.kind == "attn":
+                c["k"] = c["k"].at[:, slot].set(0)
+                c["v"] = c["v"].at[:, slot].set(0)
+                c["ks"] = c["ks"].at[:, slot].set(0.0)
+                c["vs"] = c["vs"].at[:, slot].set(0.0)
+            elif unit.kind == "ssm":
+                c["state"] = c["state"].at[slot].set(0.0)
 
     def bind_embedding(self, table) -> None:
         """Bind the token-embedding code table [vocab, d_model] int8
@@ -176,19 +246,21 @@ class DecodeSession:
         """Bind deterministic synthetic weights for every layer plus a
         synthetic embedding table — the same generation for every
         session flavor, so parity tests compare identical models."""
+        self.bind_arrays(
+            synthetic_decode_arrays(self.layers, self.spec, seed))
+
+    def bind_arrays(self, arrays: dict) -> None:
+        """Bind every layer + the embedding table from a flat
+        name->array dict (the :func:`synthetic_decode_arrays` layout —
+        also what arrives over the fleet wire protocol)."""
         for lp in self.layers:
-            w_lut, s_lut, w_dsp, s_dsp = synthetic_weights(
-                lp.index, lp.dims.k, lp.n_lut, lp.dims.n - lp.n_lut,
-                lp.bits_w_lut,
-                None if seed is None else seed + lp.index)
-            self.bind_layer(lp.index, w_lut=w_lut, s_lut=s_lut,
-                            w_dsp=w_dsp, s_dsp=s_dsp)
-        bits = self.layers[0].bits_a
-        vocab = self.layers[-1].dims.n
-        rng = np.random.default_rng(10_000 + (seed or 0))
-        lo, hi = qrange(bits)
-        self.bind_embedding(
-            rng.integers(lo, hi + 1, (vocab, self.spec.d_model)))
+            self.bind_layer(
+                lp.index,
+                w_lut=arrays.get(f"L{lp.index}.w_lut"),
+                s_lut=arrays.get(f"L{lp.index}.s_lut"),
+                w_dsp=arrays.get(f"L{lp.index}.w_dsp"),
+                s_dsp=arrays.get(f"L{lp.index}.s_dsp"))
+        self.bind_embedding(arrays["embed"])
 
     # -- the decode step ---------------------------------------------------
 
@@ -196,6 +268,10 @@ class DecodeSession:
         """Run one decode step: embed ``token`` ([batch] int32 or a
         scalar), advance the caches at ``pos`` (default: the session's
         running position) and return fp32 logits [batch, vocab]."""
+        if self.per_slot:
+            raise ExecutionError(
+                "scalar step() on a per-slot session — use "
+                "step_slots(tokens, pos) or reset(per_slot=False)")
         pos = self.pos if pos is None else int(pos)
         if not 0 <= pos < self.spec.max_seq:
             raise ExecutionError(
@@ -212,6 +288,48 @@ class DecodeSession:
             x = requantize(out, self.layers[nxt.idxs[0]].bits_a)
         self.pos = pos + 1
         return logits
+
+    def step_slots(self, tokens, pos) -> jnp.ndarray:
+        """One continuous-batching step: slot ``j`` embeds ``tokens[j]``
+        and advances its caches at its own ``pos[j]``.
+
+        The slot-batched twin of :meth:`step`: every reduction that
+        :meth:`step` takes per tensor (inter-unit requant scales, KV
+        quant scales, the causal mask, cache appends) is taken per
+        batch row here, so slot ``j``'s logits are bit-identical to a
+        batch-1 session serving that request alone — the property the
+        serving fleet's bit-exactness gate rests on. Requires
+        ``reset(per_slot=True)``; the caller owns per-slot positions
+        (``self.pos`` does not advance).
+        """
+        if not self.per_slot:
+            raise ExecutionError(
+                "step_slots needs per-slot mode (reset(per_slot=True))")
+        B = self.spec.batch
+        pos_arr = np.asarray(pos, np.int64).reshape(-1)
+        if pos_arr.shape[0] != B:
+            raise ExecutionError(
+                f"step_slots pos must be [{B}], got {pos_arr.shape}")
+        if pos_arr.min() < 0 or pos_arr.max() >= self.spec.max_seq:
+            raise ExecutionError(
+                f"slot positions {pos_arr.tolist()} outside the "
+                f"session's [0, {self.spec.max_seq}) cache window")
+        pos_v = jnp.asarray(pos_arr, jnp.int32)
+        x = self._embed_tokens(tokens)
+        for u_i, unit in enumerate(self.units):
+            if unit.kind == "head":
+                return self._run_layer(unit.idxs[0], x)
+            if unit.kind == "attn":
+                out = self._attn_unit_slots(u_i, unit, x, pos_v)
+            elif unit.kind == "ssm":
+                out = self._ssm_unit_slots(u_i, unit, x)
+            elif unit.kind == "mlp":
+                out = self._mlp_rows(unit.idxs, x)
+            else:
+                out = self._moe_unit_slots(unit, x)
+            nxt = self.units[u_i + 1]
+            x = requantize_rows(out, self.layers[nxt.idxs[0]].bits_a)
+        return None
 
     def _embed_tokens(self, token) -> jnp.ndarray:
         B = self.spec.batch
@@ -322,6 +440,93 @@ class DecodeSession:
 
     def _cache_set(self, cache, row, pos: int):
         return cache.at[pos].set(row)
+
+    # -- per-slot glue (continuous batching) -------------------------------
+    #
+    # Row-independent twins of the units above: identical math, but no
+    # reduction ever crosses batch rows and each row indexes the caches
+    # at its own position. With a single slot they reduce to exactly
+    # the scalar-pos path (tested), which is what makes mixed-request
+    # batches bit-exact per request.
+
+    def _mlp_rows(self, idxs, x_q):
+        ig, iu, idn = idxs
+        h = jax.nn.silu(self._run_layer(ig, x_q)) * self._run_layer(iu, x_q)
+        return self._run_layer(
+            idn, requantize_rows(h, self.layers[idn].bits_a))
+
+    def _moe_unit_slots(self, unit: _Unit, x_q):
+        router_logits = self._run_layer(unit.idxs[0], x_q)
+        experts, shared = [], None
+        for j in range(1, len(unit.idxs), 3):
+            triple = unit.idxs[j:j + 3]
+            if ".mlp.shared." in self.layers[triple[0]].name:
+                shared = triple
+            else:
+                experts.append(triple)
+        w = jax.nn.softmax(router_logits, axis=-1)[:, :len(experts)]
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+        out = jnp.zeros((self.spec.batch, self.spec.d_model), jnp.float32)
+        for e, triple in enumerate(experts):
+            out = out + w[:, e:e + 1] * self._mlp_rows(triple, x_q)
+        if shared is not None:
+            out = out + self._mlp_rows(shared, x_q)
+        return out
+
+    def _attn_unit_slots(self, u_i: int, unit: _Unit, x_q, pos):
+        iq, ik, iv, io = unit.idxs
+        q = self._run_layer(iq, x_q)
+        k = self._run_layer(ik, x_q)
+        v = self._run_layer(iv, x_q)
+        c = self._caches[u_i]
+        bits_kv = self.layers[ik].bits_a
+        kq, ks = _quant_rows_with_scale(k, bits_kv)
+        vq, vs = _quant_rows_with_scale(v, bits_kv)
+        bidx = jnp.arange(self.spec.batch)
+        c["k"] = c["k"].at[pos, bidx].set(kq)
+        c["v"] = c["v"].at[pos, bidx].set(vq)
+        c["ks"] = c["ks"].at[pos, bidx].set(ks)
+        c["vs"] = c["vs"].at[pos, bidx].set(vs)
+        ctx = self._attn_ctx_slots(q, c, pos)
+        return self._run_layer(
+            io, requantize_rows(ctx, self.layers[io].bits_a))
+
+    def _attn_ctx_slots(self, q, cache, pos):
+        """Causal GQA attention with a per-slot causal horizon: row
+        ``b`` attends to cache positions ``<= pos[b]`` and dequantizes
+        with its own per-slot scales."""
+        spec = self.spec
+        B, hq, hkv, hd = spec.batch, spec.n_heads, spec.n_kv_heads, \
+            spec.head_dim
+        S = cache["k"].shape[0]
+        kf = cache["k"].astype(jnp.float32) * cache["ks"][:, :, None]
+        vf = cache["v"].astype(jnp.float32) * cache["vs"][:, :, None]
+        qh = q.reshape(B, hq, hd)
+        kh = jnp.repeat(kf.reshape(S, B, hkv, hd), hq // hkv, axis=2)
+        vh = jnp.repeat(vf.reshape(S, B, hkv, hd), hq // hkv, axis=2)
+        scores = jnp.einsum("bhd,sbhd->bhs", qh, kh) / math.sqrt(hd)
+        mask = jnp.arange(S)[None, None, :] <= pos[:, None, None]
+        weights = jax.nn.softmax(
+            jnp.where(mask, scores, -jnp.inf), axis=-1)
+        ctx = jnp.einsum("bhs,sbhd->bhd", weights, vh)
+        return ctx.reshape(B, hq * hd)
+
+    def _ssm_unit_slots(self, u_i: int, unit: _Unit, x_q):
+        izx, ibc, idt, iout = unit.idxs
+        zx = self._run_layer(izx, x_q)
+        bc = self._run_layer(ibc, x_q)
+        dt = self._run_layer(idt, x_q)
+        d_inner = self.layers[iout].dims.k
+        z, xin = zx[:, :d_inner], zx[:, d_inner:]
+        decay = jnp.repeat(jax.nn.sigmoid(dt), d_inner // dt.shape[1],
+                           axis=1)
+        state = self._caches[u_i]["state"]
+        state = decay * state + (1.0 - decay) * jax.nn.silu(xin)
+        self._caches[u_i]["state"] = state
+        gate = 1.0 + jnp.tanh(jnp.mean(bc, axis=-1, keepdims=True))
+        y = state * jax.nn.silu(z) * gate
+        return self._run_layer(
+            iout, requantize_rows(y, self.layers[iout].bits_a))
 
     # -- subclass hooks ----------------------------------------------------
 
@@ -445,6 +650,16 @@ class ExecutorSession(DecodeSession):
             logits = super().step(token, pos)
         self._warmed = True
         METRICS.incr("serve.decode.tokens")
+        return logits
+
+    def step_slots(self, tokens, pos) -> jnp.ndarray:
+        from repro.obs import METRICS
+        phase = "steady" if self._warmed else "warmup"
+        with self.tracer.measure(f"exec.{self.session_name}.step_slots",
+                                 self.program_name, phase=phase):
+            logits = super().step_slots(tokens, pos)
+        self._warmed = True
+        METRICS.incr("serve.decode.tokens", self.spec.batch)
         return logits
 
     def _run_layer(self, index, x_q):

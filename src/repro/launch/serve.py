@@ -169,6 +169,12 @@ def main() -> None:
                     help="tokens to generate through the compiled "
                          "decode-resident session (--quantize path; "
                          "0 disables the session demo)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="also serve through the distributed fleet: N "
+                         "in-process golden workers behind the async "
+                         "program server with continuous batching "
+                         "(repro.serve.fleet); fleet request/worker "
+                         "counters land in the same --metrics export")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="export the run's metrics registry (.json or "
                          ".csv) on exit")
@@ -284,6 +290,26 @@ def main() -> None:
               f"{total_new / max(t_decode, 1e-9):.0f} tok/s")
         sample = jnp.concatenate(out, axis=1)[0, :16]
         print("sample tokens:", list(map(int, sample)))
+        if args.fleet > 0:
+            # distributed-fleet demo: the same decode-resident program,
+            # served by N workers with continuous batching. Runs before
+            # the --metrics export so the serve.fleet.* request/worker
+            # counters land in the same registry file.
+            from repro.serve.fleet import FleetServer
+            workers = [(f"w{i}", "golden", "thread")
+                       for i in range(args.fleet)]
+            n_req = 2 * args.fleet + 2
+            t0 = time.time()
+            with FleetServer(args.arch, workers, batch_slots=2,
+                             max_seq=8, seed=args.seed) as fleet:
+                rows = [f.result(600) for f in
+                        [fleet.submit([3, 11], 3) for _ in range(n_req)]]
+            t_fleet = time.time() - t0
+            print(f"# fleet[{args.fleet} workers]: {n_req} requests in "
+                  f"{t_fleet:.1f} s "
+                  f"({n_req / max(t_fleet, 1e-9):.2f} req/s), "
+                  f"{METRICS.counter('serve.fleet.steps')} fleet steps, "
+                  f"tokens {rows[0].tolist()}")
         if args.metrics:
             METRICS.save(args.metrics)
             print(f"# metrics written to {args.metrics}")

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import io
 import json
+import math
 import threading
 
 
@@ -58,6 +59,16 @@ class MetricsRegistry:
     def series(self, name: str) -> list[float]:
         with self._lock:
             return list(self._series.get(name, ()))
+
+    def percentile(self, name: str, q: float) -> float:
+        """Nearest-rank percentile of an observation series (``q`` in
+        [0, 100]); 0.0 for an empty series. Used for the serving
+        fleet's p50/p99 latency rows."""
+        vals = sorted(self.series(name))
+        if not vals:
+            return 0.0
+        rank = max(1, math.ceil(q / 100.0 * len(vals)))
+        return vals[min(rank, len(vals)) - 1]
 
     def snapshot(self) -> dict:
         """Point-in-time JSON-serializable view (sorted keys throughout)."""

@@ -1,4 +1,6 @@
-"""Serving substrate: prefill/decode step factories + batched generation."""
+"""Serving substrate: prefill/decode step factories, batched
+generation, and the distributed fleet (async program server + executor
+workers over the ``serve/protocol.py`` wire)."""
 from repro.serve.engine import (
     ServeState,
     greedy_generate,

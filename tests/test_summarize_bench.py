@@ -1,0 +1,114 @@
+"""The CI bench-table renderer (``benchmarks/summarize_bench.py``).
+
+The one-elif-table contract: every bench kind the repo emits has a
+``describe`` branch that renders its key metrics, unknown kinds fall
+back to wall time, and ``summarize``/``main`` produce the markdown
+table CI appends to ``$GITHUB_STEP_SUMMARY``.
+"""
+import csv
+import importlib.util
+import json
+import os
+
+import pytest
+
+_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                     "benchmarks", "summarize_bench.py")
+_spec = importlib.util.spec_from_file_location("summarize_bench", _PATH)
+summarize_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(summarize_bench)
+
+#: one minimal blob per bench kind, with a fragment the rendered line
+#: must contain — adding a bench kind means adding a row here
+KIND_BLOBS = {
+    "compiler": (
+        {"layers": 16, "instructions": 900, "instructions_o1": 700},
+        "16 layers"),
+    "compiler.backends": (
+        {"golden_s": 4.0, "pallas_s": 1.0, "speedup_x": 4.0,
+         "bit_exact": True},
+        "bit_exact=True"),
+    "compiler.cnn_execute": (
+        {"in_hw": 32, "layers": 21, "depthwise_layers": 0,
+         "pallas_s": 2.0},
+        "e2e @32px"),
+    "compiler.multi_device": (
+        {"plans": {"pipeline_x2": {"speedup_x": 1.7}},
+         "pipeline_x2_beats_1dev": True},
+        "pipeline_x2 1.7x"),
+    "obs.overhead": (
+        {"sim_on_s": 1.1, "sim_off_s": 1.0, "overhead_pct": 10.0,
+         "trace_events": 500, "closure_ok": True},
+        "closure_ok=True"),
+    "kernels.fused": (
+        {"fused_s": 1.0, "split_s": 2.0, "speedup_x": 2.0,
+         "launches_fused": 3, "launches_split": 9,
+         "col_staging_bytes_removed": 4096, "bit_exact": True},
+        "launches 3 vs 9"),
+    "dse.sim_gap": (
+        {"analytical_ms": 9.0, "simulated_ms": 10.0, "gap_pct": 10.0,
+         "within_tol": True},
+        "within_tol=True"),
+    "compiler.gather_overlap": (
+        {"latency_overlap": 800, "latency_serialized": 1000,
+         "gain_pct": 20.0},
+        "gather overlap"),
+    "serve.decode": (
+        {"family": "lm", "steady_cycles": 100, "warmup_cycles": 400,
+         "naive_fixed_seq_cycles_per_token": 900,
+         "resident_vs_naive_x": 9.0, "host_tok_per_s": 5.0},
+        "lm: steady 100"),
+    "serve.fleet": (
+        {"policy": "continuous", "req_per_s": 0.9, "completed": 8,
+         "requests": 8, "failed": 0, "p50_ms": 1200.0,
+         "p99_ms": 2400.0, "workers": 2, "utilization_pct": 91.0,
+         "bit_exact": True},
+        "continuous: 0.9 req/s"),
+    "serve.fleet.compare": (
+        {"continuous_req_per_s": 0.9, "serial_req_per_s": 0.3,
+         "speedup_x": 3.0, "continuous_beats_serial": True},
+        "beats=True"),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_BLOBS))
+def test_describe_covers_kind(kind):
+    blob, fragment = KIND_BLOBS[kind]
+    line = summarize_bench.describe(kind, blob, 1e6)
+    assert fragment in line
+
+
+def test_unknown_kind_falls_back_to_wall_time():
+    assert summarize_bench.describe("future.bench", {}, 2_500_000) \
+        == "2.50s"
+    assert summarize_bench.describe("", {}, 0.0) == "0.00s"
+
+
+def test_summarize_renders_markdown_table():
+    blob, fragment = KIND_BLOBS["serve.fleet"]
+    rows = [
+        ("serve.fleet.continuous.llama3.2-1b", 9.3e6,
+         json.dumps(dict(blob, BENCH="serve.fleet"))),
+        ("mystery.row", 1e6, json.dumps({"BENCH": "mystery"})),
+    ]
+    out = summarize_bench.summarize(rows, "serving fleet (smoke)")
+    lines = out.splitlines()
+    assert lines[0] == "### serving fleet (smoke)"
+    assert "| row | key metrics |" in lines
+    assert any("`serve.fleet.continuous.llama3.2-1b`" in ln
+               and fragment in ln for ln in lines)
+    assert any("`mystery.row`" in ln and "1.00s" in ln for ln in lines)
+
+
+def test_cli_main_reads_csv_files(tmp_path, capsys):
+    p = tmp_path / "rows.csv"
+    with open(p, "w", newline="") as fh:
+        w = csv.writer(fh)
+        blob, _ = KIND_BLOBS["serve.fleet.compare"]
+        w.writerow(("serve.fleet.compare.llama3.2-1b", 0.0,
+                    json.dumps(dict(blob, BENCH="serve.fleet.compare"))))
+    summarize_bench.main([str(p), str(p), "--title", "compare"])
+    out = capsys.readouterr().out
+    assert out.startswith("### compare")
+    # both input files contribute rows
+    assert out.count("`serve.fleet.compare.llama3.2-1b`") == 2
