@@ -1,0 +1,92 @@
+"""Dataset-scale accuracy validation of compiled CNN programs.
+
+The Table 4/5 companion: for each architecture, train + freeze the
+fp32 reference, compile the quantized network through the full NN->ISA
+toolchain, bind folded weights, and measure **top-1 agreement** over a
+synthetic eval stream next to the simulated latency
+(``repro.eval.accuracy`` holds the machinery; this is the CLI).
+
+Rows are the repo's standard ``name, us, BENCH-json`` CSV
+(``summarize_bench.py`` renders them), kind ``accuracy.eval``. The
+process exits nonzero when any row misses the documented agreement
+floor (``repro.eval.accuracy.AGREEMENT_FLOOR``) — the CI ``accuracy``
+job gates on that.
+
+  PYTHONPATH=src python benchmarks/accuracy_eval.py              # full
+  PYTHONPATH=src python benchmarks/accuracy_eval.py --smoke \\
+      --backend golden --backend pallas                          # CI
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import sys
+import time
+
+from repro.eval.accuracy import AGREEMENT_FLOOR, measure
+
+ARCHS = ("resnet18", "mobilenet_v2")
+
+
+def run(arch: str, backend: str, n_samples: int, batch: int,
+        train_steps: int, w_bits: int, a_bits: int, ratio: float,
+        simulate: bool) -> tuple[tuple[str, float, str], bool]:
+    t0 = time.time()
+    rep = measure(arch, n_samples=n_samples, batch=batch, backend=backend,
+                  w_bits=w_bits, a_bits=a_bits, ratio=ratio,
+                  train_steps=train_steps, simulate=simulate)
+    wall_us = 1e6 * (time.time() - t0)
+    row = (f"accuracy.eval.{arch}.{backend}", wall_us,
+           json.dumps(rep.bench_row(), sort_keys=True))
+    return row, rep.agreement >= AGREEMENT_FLOOR
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="dataset-scale compiled-vs-fp32 top-1 agreement")
+    ap.add_argument("--arch", action="append", choices=ARCHS,
+                    help="architecture(s); default: both")
+    ap.add_argument("--backend", action="append",
+                    choices=("golden", "pallas"),
+                    help="executor backend(s); default: pallas")
+    ap.add_argument("--samples", type=int, default=10_000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--train-steps", type=int, default=200)
+    ap.add_argument("--w-bits", type=int, default=4)
+    ap.add_argument("--a-bits", type=int, default=8)
+    ap.add_argument("--ratio", type=float, default=0.5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI size: 96 samples, no latency simulation "
+                         "(training stays at the documented 200 steps "
+                         "— the floor is calibrated for a converged "
+                         "reference)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; do not exit nonzero below the "
+                         "agreement floor")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or list(ARCHS)
+    backends = args.backend or ["pallas"]
+    n_samples, train_steps, simulate = args.samples, args.train_steps, True
+    if args.smoke:
+        n_samples, simulate = 96, False
+
+    writer = csv.writer(sys.stdout)
+    ok = True
+    for arch in archs:
+        for backend in backends:
+            row, meets = run(arch, backend, n_samples, args.batch,
+                             train_steps, args.w_bits, args.a_bits,
+                             args.ratio, simulate)
+            writer.writerow(row)
+            sys.stdout.flush()
+            if not meets:
+                print(f"FAIL: {row[0]} below agreement floor "
+                      f"{AGREEMENT_FLOOR}", file=sys.stderr)
+                ok = False
+    return 0 if (ok or args.no_gate) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

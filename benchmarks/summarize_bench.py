@@ -69,6 +69,14 @@ def describe(kind: str, b: dict, us: float) -> str:
                 f"p99 {b['p99_ms']}ms, {b['workers']} workers "
                 f"util {b['utilization_pct']}%, "
                 f"bit_exact={b['bit_exact']}")
+    elif kind == "accuracy.eval":
+        lat = b.get("latency_ms")
+        return (f"{b['network']}/{b['backend']}: "
+                f"{b['agreement'] * 100:.2f}% top-1 agreement over "
+                f"{b['n_samples']} samples "
+                f"(floor {b['agreement_floor'] * 100:.0f}%, "
+                f"meets={b['meets_floor']})"
+                + (f", sim latency {lat}ms" if lat is not None else ""))
     elif kind == "serve.fleet.compare":
         return (f"continuous {b['continuous_req_per_s']} vs serial "
                 f"{b['serial_req_per_s']} req/s "

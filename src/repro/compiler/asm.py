@@ -66,6 +66,7 @@ from repro.compiler.program import (
     ENGINES,
     ConvGeometry,
     CoreProgram,
+    ElementwiseOp,
     LayerProgram,
     MemoryMap,
     Program,
@@ -193,6 +194,41 @@ def _parse_geom(text: str) -> ConvGeometry:
 
 
 # ---------------------------------------------------------------------------
+# Elementwise tail (de)serialization (shared by text and binary forms)
+# ---------------------------------------------------------------------------
+
+
+def _fmt_ew(ops: tuple) -> str:
+    """Compact space-free form for the ``.layer`` line and the binary
+    metadata: ``add:2,relu,requant:4`` (the arg is ``src_offset`` for
+    ``add`` and ``bits`` for ``requant``)."""
+    parts = []
+    for op in ops:
+        if op.kind == "add":
+            parts.append(f"add:{op.src_offset}")
+        elif op.kind == "requant":
+            parts.append(f"requant:{op.bits}")
+        else:
+            parts.append(op.kind)
+    return ",".join(parts)
+
+
+def _parse_ew(text: str) -> tuple:
+    if not text:
+        return ()
+    ops = []
+    for part in text.split(","):
+        kind, _, arg = part.partition(":")
+        if kind == "add":
+            ops.append(ElementwiseOp("add", src_offset=int(arg)))
+        elif kind == "requant":
+            ops.append(ElementwiseOp("requant", bits=int(arg)))
+        else:
+            ops.append(ElementwiseOp(kind))
+    return tuple(ops)
+
+
+# ---------------------------------------------------------------------------
 # Config (de)serialization helpers
 # ---------------------------------------------------------------------------
 
@@ -239,10 +275,11 @@ def disassemble(prog: Program) -> str:
     for lp in prog.layers:
         geom = "" if lp.geometry is None \
             else f" geom={_fmt_geom(lp.geometry)}"
+        ew = "" if not lp.elementwise else f" ew={_fmt_ew(lp.elementwise)}"
         out.append(f".layer {lp.index} name={lp.name} m={lp.dims.m} "
                    f"k={lp.dims.k} n={lp.dims.n} n_lut={lp.n_lut} "
                    f"bits_w={lp.bits_w_lut} bits_a={lp.bits_a} "
-                   f"dw={int(lp.depthwise)}{geom}")
+                   f"dw={int(lp.depthwise)}{geom}{ew}")
         for cp in lp.cores():
             toks = ",".join(f"{ch}:{n}" for ch, n
                             in sorted(cp.initial_tokens.items()))
@@ -305,7 +342,8 @@ def assemble(text: str) -> Program:
                     bits_a=int(kv["bits_a"]), depthwise=bool(int(kv["dw"])),
                     lut=None, dsp=None,
                     geometry=_parse_geom(kv["geom"])
-                    if "geom" in kv else None))
+                    if "geom" in kv else None,
+                    elementwise=_parse_ew(kv.get("ew", ""))))
                 cur_core = cur_stream = None
             elif line.startswith(".core"):
                 toks = line.split()
@@ -363,6 +401,7 @@ def to_binary(prog: Program) -> bytes:
             "n_lut": lp.n_lut, "bits_w": lp.bits_w_lut, "bits_a": lp.bits_a,
             "dw": int(lp.depthwise),
             "geom": _geom_record(lp.geometry),
+            "ew": _fmt_ew(lp.elementwise),
             "cores": [{
                 "core": CORE_NAMES[cp.core],
                 "tokens": dict(sorted(cp.initial_tokens.items())),
@@ -421,7 +460,8 @@ def _parse_binary(data: bytes) -> Program:
             dims=GemmDims(*lm["dims"]), n_lut=lm["n_lut"],
             bits_w_lut=lm["bits_w"], bits_a=lm["bits_a"],
             depthwise=bool(lm["dw"]), lut=None, dsp=None,
-            geometry=_geom_from_record(lm.get("geom")))
+            geometry=_geom_from_record(lm.get("geom")),
+            elementwise=_parse_ew(lm.get("ew", "")))
         for cm in lm["cores"]:
             streams = {}
             for engine in ENGINES:

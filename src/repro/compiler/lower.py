@@ -45,6 +45,7 @@ from repro.core.scheduler import (
 from repro.compiler.program import (
     CHANNEL_FLAGS,
     CoreProgram,
+    ElementwiseOp,
     GemmLayer,
     LayerProgram,
     MemoryMap,
@@ -62,6 +63,18 @@ from repro.compiler.program import (
 KV_APPEND_STAGE = 4
 KV_READ_STAGE = 5
 PERSISTENT_STAGES = (KV_APPEND_STAGE, KV_READ_STAGE)
+
+#: ``stage_ctrl`` of the fused elementwise result tail (conv chains):
+#: a stage-6 Fetch reads the residual-add operand from the producer's
+#: output segment; a stage-6 Result applies the tail (add / activation
+#: / pool / requant) over the layer's fp32 result and writes the
+#: requantized codes back to ``L{i}.out``. The stage is sequential in
+#: the result stream — no new sync channel (both cores' flag spaces
+#: are full), the tail simply runs after the last result drain and
+#: before the inter-layer barrier send.
+EW_STAGE = 6
+#: Elementwise throughput model: lanes applied per cycle per op pass.
+EW_LANES = 16
 
 #: Channels whose tokens are posted by the fetch engine strictly after
 #: weight fetches — the sends that go away with the fetches when a
@@ -350,6 +363,21 @@ def _barrier(core: isa.CoreSel, ch: str) -> tuple[Op, Op]:
     return send, wait
 
 
+def _requant_bits(layers: list[GemmLayer], ba: list[int], i: int) -> int:
+    """Write-back code width of conv layer ``i``: the activation
+    bit-width of its first consumer — a later layer whose activation
+    read (``geometry.src_offset``) or residual add reaches ``i``.
+    Returns 0 for the final layer (no consumer: raw fp32 logits)."""
+    for j in range(i + 1, len(layers)):
+        gj = layers[j].geometry
+        if j - (gj.src_offset if gj is not None else 1) == i:
+            return ba[j]
+        for op in layers[j].elementwise:
+            if op.kind == "add" and j - op.src_offset == i:
+                return ba[j]
+    return 0
+
+
 def lower_network(name: str, layers: list[GemmLayer],
                   lut_cfg: LutCoreConfig, dsp_cfg: DspCoreConfig,
                   dev: FPGADevice,
@@ -470,10 +498,45 @@ def lower_network(name: str, layers: list[GemmLayer],
                 LayerAddrs(wgt_dsp.base, act_seg.base, out_seg.base),
                 act_bytes=act_bytes)
 
+        # Fused elementwise result tail (conv chains only): the spec's
+        # add/activation ops plus the write-back requant at the first
+        # consumer's activation bit-width. Emitted as stage-6 DMAs on
+        # the layer's first active core — sequential in its streams, so
+        # the event-driven simulator times them with no extra channel.
+        ew = tuple(layer.elementwise)
+        if geom is not None:
+            qb = _requant_bits(layers, ba, i)
+            if qb:
+                ew = ew + (ElementwiseOp("requant", bits=qb),)
+        if ew and geom is not None:
+            cp = lut_cp if lut_cp is not None else dsp_cp
+            qbits = ew[-1].bits if ew[-1].kind == "requant" else 32
+            phw = geom.pooled_hw()
+            ew_out_bytes = math.ceil(phw * phw * geom.c_out * qbits / 8)
+            for op in ew:
+                if op.kind != "add":
+                    continue
+                src_res = i - op.src_offset
+                res_seg = out_segs[src_res] if src_res >= 0 else in_seg
+                res_bytes = math.ceil(g.m * g.n * ba[i] / 8)
+                cp.streams["fetch"].append(
+                    Op(isa.FetchInstr(cp.core, 0, EW_STAGE, 0,
+                                      res_seg.base, 0, _clamp16(res_bytes)),
+                       cycles=_dma_cycles(res_bytes, dev)))
+                cp.bytes_fetched += res_bytes
+            ew_cycles = (len(ew) * math.ceil(g.m * g.n / EW_LANES)
+                         + _dma_cycles(ew_out_bytes, dev))
+            cp.streams["result"].append(
+                Op(isa.ResultInstr(cp.core, 0, EW_STAGE, 0, out_seg.base,
+                                   len(ew) & 0xFFFFFF,
+                                   _clamp16(ew_out_bytes)),
+                   cycles=ew_cycles))
+            cp.bytes_written += ew_out_bytes
+
         progs.append(LayerProgram(
             index=i, name=layer.name, dims=g, n_lut=n_lut,
             bits_w_lut=bw[i], bits_a=ba[i], depthwise=layer.depthwise,
-            lut=lut_cp, dsp=dsp_cp, geometry=geom))
+            lut=lut_cp, dsp=dsp_cp, geometry=geom, elementwise=ew))
         out_segs.append(out_seg)
 
     # Inter-layer barriers (per core, when active on both sides).

@@ -425,7 +425,7 @@ def lower_partitioned(name: str, layers: list[GemmLayer],
                     c_in=hi - lo if gl.depthwise else geom.c_in)
             shard_layers.append(GemmLayer(
                 gl.name, GemmDims(gl.dims.m, gl.dims.k, hi - lo),
-                gl.depthwise, geom))
+                gl.depthwise, geom, elementwise=gl.elementwise))
             # overlap of [lo, hi) with the LUT columns [0, n_lut)
             shard_n_luts.append(max(0, min(hi, splits[i]) - lo))
         progs.append(lower_network(dev_name(d), shard_layers, lut_cfg,

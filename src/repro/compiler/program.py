@@ -217,6 +217,44 @@ class ConvGeometry:
 
 
 # ---------------------------------------------------------------------------
+# Fused elementwise result tail (§residual/activation glue, in-program)
+# ---------------------------------------------------------------------------
+
+
+#: Elementwise op kinds, in canonical tail order: an optional residual
+#: ``add`` first, then one activation (``relu``/``relu6``/``hswish``),
+#: then (after the layer's ``pool`` glue) the write-back ``requant``.
+ELEMENTWISE_KINDS = ("add", "relu", "relu6", "hswish", "requant")
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementwiseOp:
+    """One operation of a layer's fused elementwise result tail.
+
+    The tail runs on the layer's fp32 result tiles before write-back:
+    ``add`` accumulates the stored output of the producer ``src_offset``
+    layers back (dequantized at that producer's write-back scale —
+    ResNet shortcuts, MobileNet inverted residuals), the activation
+    kinds apply pointwise, and ``requant`` re-quantizes to ``bits``-bit
+    codes with a per-tensor max-abs scale — the codes the layer's DDR
+    output segment actually holds. The layer's ``geometry.pool`` glue
+    applies between the activation and the requant, matching the fp32
+    network (pool over activations, then quantize).
+    """
+    kind: str
+    src_offset: int = 0   # add: producer distance (layer pos - src pos)
+    bits: int = 0         # requant: target code width
+
+    def __post_init__(self):
+        if self.kind not in ELEMENTWISE_KINDS:
+            raise ValueError(f"unknown elementwise kind {self.kind!r}")
+        if self.kind == "add" and self.src_offset < 1:
+            raise ValueError("elementwise add needs src_offset >= 1")
+        if self.kind == "requant" and not (1 <= self.bits <= 8):
+            raise ValueError(f"requant bits out of range: {self.bits}")
+
+
+# ---------------------------------------------------------------------------
 # Per-core, per-layer stream bundles
 # ---------------------------------------------------------------------------
 
@@ -282,6 +320,10 @@ class LayerProgram:
     # Spatial geometry for conv layers (None for plain GEMM/FC layers):
     # drives the executor's im2col staging and the NHWC chain.
     geometry: ConvGeometry | None = None
+    # Fused elementwise result tail (ElementwiseOp tuple, canonical
+    # order add -> activation -> requant); empty for LM/FC layers whose
+    # inter-layer glue stays in the session frontends.
+    elementwise: tuple = ()
 
     @property
     def n_dsp(self) -> int:
@@ -406,6 +448,11 @@ class Program:
         h.update(self.device.name.encode())
         if self.step is not None:
             h.update(repr(self.step).encode())
+        for lp in self.layers:
+            if lp.elementwise:
+                # tail semantics (op kinds, add sources, requant bits)
+                # live in layer metadata, not the instruction words
+                h.update(repr(lp.elementwise).encode())
         for w in self.words():
             h.update(w.to_bytes(16, "little"))
         return h.hexdigest()
@@ -438,12 +485,17 @@ class GemmLayer:
     dims: GemmDims
     depthwise: bool = False
     geometry: ConvGeometry | None = None
+    # Residual-add / activation ops of the layer's fused result tail
+    # (the write-back requant is appended by ``lower_network``, which
+    # knows the consumer's activation bit-width).
+    elementwise: tuple = ()
 
     @staticmethod
     def from_conv(spec) -> "GemmLayer":
         """Lower a ``core/workloads.py`` ConvSpec to its GEMM view,
         keeping the spatial geometry (the downsample shortcuts read the
-        block input, three layers back in the zoo's layer order)."""
+        block input, three layers back in the zoo's layer order) and the
+        spec's residual/activation glue as elementwise tail ops."""
         geom = ConvGeometry(
             kernel=spec.kernel, stride=spec.stride, pad=spec.kernel // 2,
             in_hw=spec.in_hw, out_hw=spec.out_hw,
@@ -451,4 +503,10 @@ class GemmLayer:
             c_out=spec.c_out,
             src_offset=3 if spec.shortcut else 1,
             pool=getattr(spec, "pool", ""))
-        return GemmLayer(spec.name, spec.gemm(), spec.depthwise, geom)
+        ew = []
+        if getattr(spec, "res_src", 0):
+            ew.append(ElementwiseOp("add", src_offset=spec.res_src))
+        if getattr(spec, "act", ""):
+            ew.append(ElementwiseOp(spec.act))
+        return GemmLayer(spec.name, spec.gemm(), spec.depthwise, geom,
+                         elementwise=tuple(ew))

@@ -18,8 +18,10 @@ validation, activation checks and im2col staging (conv layers accept
 spatial NHWC tensors and are staged per their
 :class:`~repro.compiler.program.ConvGeometry`; depthwise layers stage
 one im2col slice per output channel), layer chaining with inter-layer
-requantization (FC chains and spatial NHWC conv chains with pooling
-glue and shortcut sources), and the error taxonomy.
+requantization (FC chains, and spatial NHWC conv chains that execute
+each layer's in-program fused elementwise tail — residual add,
+activation, pool glue, write-back requant — in absolute fp32 units),
+and the error taxonomy.
 """
 from __future__ import annotations
 
@@ -30,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import simulate
-from repro.quant.uniform import fit_scale, qrange
+from repro.quant.uniform import _inv_hi, fit_scale, qrange
 from repro.compiler.program import CORE_NAMES, ConvGeometry, CoreProgram, \
     LayerProgram, Program
 
@@ -240,19 +242,31 @@ class ExecutorBackend:
                 f"layer {lp.index} {CORE_NAMES[cp.core]} streams "
                 f"deadlock: {e}") from e
 
-    def run(self, x_q) -> jnp.ndarray:
+    def run(self, x_q, x_scale: float = 1.0) -> jnp.ndarray:
         """Chain all layers end to end.
 
         FC-style networks (GEMMs compose: n_i == k_{i+1}) chain the
         [m, n] outputs directly; conv programs (every layer carries a
-        geometry) chain spatially — each layer's output is reshaped
-        NHWC, pooled per its ``pool`` glue, requantized to the
-        consumer's ``bits_a`` and staged through im2col, with shortcut
-        layers reading the producer their ``src_offset`` names.
-        ``x_q`` is int8: [m, k] for FC chains, the spatial
-        [in_hw, in_hw, c_in] input image for conv chains.
+        geometry) chain spatially — each layer's fp32 result is scaled
+        to absolute units, run through its fused elementwise tail
+        (residual add / activation / pool glue / write-back requant,
+        see ``LayerProgram.elementwise``) and the stored codes are
+        staged through im2col by the consumers its ``src_offset`` /
+        add ``src_offset`` name. ``x_q`` is int8: [m, k] for FC
+        chains, the spatial [in_hw, in_hw, c_in] input image for conv
+        chains; ``x_scale`` is the input's dequant scale (conv chains
+        return absolute fp32 logits for the final layer).
         """
-        return chain_layers(self.program.layers, self.run_layer, x_q)
+        return chain_layers(self.program.layers, self.run_layer, x_q,
+                            x_scale=x_scale,
+                            tail_factory=self._elementwise_tail)
+
+    def _elementwise_tail(self, lp: LayerProgram):
+        """Tail callable for one conv layer — overridable: the Pallas
+        backend returns a jitted, program-cached fused epilogue; the
+        default runs the shared jnp tail eagerly."""
+        return elementwise_tail(tuple(lp.elementwise),
+                                lp.geometry.pool if lp.geometry else "")
 
     # -- backend hook ------------------------------------------------------
 
@@ -271,6 +285,65 @@ def requantize(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8)
 
 
+def requantize_with_scale(x: jnp.ndarray, bits: int):
+    """:func:`requantize` that also returns the per-tensor scale — the
+    spatial chain tracks (codes, scale) pairs so residual adds and the
+    non-scale-invariant activations (relu6/hswish) run in absolute fp32
+    units. Bit-identical codes to :func:`requantize`."""
+    s_a = fit_scale(x, bits)
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8), s_a
+
+
+def apply_elementwise(y: jnp.ndarray, ops, residual=None) -> jnp.ndarray:
+    """Apply the add/activation ops of a fused elementwise tail to a
+    layer's absolute fp32 output ``y`` (``requant`` is the chain's job:
+    it produces the (codes, scale) pair; pool glue applies between the
+    activation and the requant).
+
+    ``residual`` is the dequantized add operand (same shape as ``y``),
+    required iff an ``add`` op is present. Shared verbatim by the eager
+    golden/multi chains and the jitted Pallas epilogue so every backend
+    computes the exact same tail.
+    """
+    for op in ops:
+        if op.kind == "add":
+            if residual is None:
+                raise ExecutionError("elementwise add without a residual "
+                                     "operand")
+            y = y + residual
+        elif op.kind == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif op.kind == "relu6":
+            y = jnp.clip(y, 0.0, 6.0)
+        elif op.kind == "hswish":
+            y = y * jnp.clip(y + 3.0, 0.0, 6.0) * (1.0 / 6.0)
+        elif op.kind != "requant":
+            raise ExecutionError(f"unknown elementwise kind {op.kind!r}")
+    return y
+
+
+def elementwise_tail(ops, pool: str):
+    """Build the functional form of one layer's fused elementwise tail:
+    ``tail(y_abs, residual=None) -> (y_post, codes, scale)`` — add/act
+    ops, the geometry's ``pool`` glue, then the write-back ``requant``
+    producing the stored (codes, scale) pair (``(y, None, None)`` when
+    the tail carries no requant, i.e. the final layer). Pure jnp, so
+    the Pallas backend jits it as the layer's fused epilogue while the
+    golden chain runs it eagerly — same function, bit-identical."""
+    ops = tuple(ops)
+    rq = [op for op in ops if op.kind == "requant"]
+
+    def tail(y, residual=None):
+        y = apply_elementwise(y, ops, residual)
+        y = apply_pool(y, pool)
+        if rq:
+            codes, scale = requantize_with_scale(y, rq[0].bits)
+            return y, codes, scale
+        return y, None, None
+    return tail
+
+
 def requantize_rows(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Row-independent twin of :func:`requantize`: one max-abs scale
     per batch row instead of per tensor.
@@ -284,28 +357,34 @@ def requantize_rows(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     """
     lo, hi = qrange(bits)
     s_a = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True),
-                      1e-8) / hi
+                      1e-8) * _inv_hi(bits)
     return jnp.clip(jnp.round(x / s_a), lo, hi).astype(jnp.int8)
 
 
-def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
+def chain_layers(layers, run_layer, x_q, x_scale: float = 1.0,
+                 tail_factory=None):
     """Chain ``layers`` through ``run_layer(index, x_q)`` with the
     inter-layer requantization the hardware applies on write-back.
 
-    The single source of truth for the bit-exactness-critical requant
-    chain: ``ExecutorBackend.run`` drives it over one program's layers,
+    The single source of truth for the bit-exactness-critical chain:
+    ``ExecutorBackend.run`` drives it over one program's layers,
     ``MultiDeviceExecutor.run`` over a bundle's global layers — so the
     multi-device hand-off requantizes exactly like the single-device
-    chain. ``layers`` items need ``.index``, ``.dims``, ``.bits_a``
-    and ``.geometry``; when every layer carries a geometry the chain
-    is spatial (NHWC reshape + pool glue + im2col staging, shortcut
-    layers reading ``src_offset`` producers), otherwise the FC rule
-    n_i == k_{i+1} applies.
+    chain. ``layers`` items need ``.index``, ``.dims``, ``.bits_a``,
+    ``.geometry`` and ``.elementwise``; when every layer carries a
+    geometry the chain is spatial (NHWC reshape + the in-program fused
+    elementwise tail + im2col staging, shortcut layers reading
+    ``src_offset`` producers), otherwise the FC rule n_i == k_{i+1}
+    applies (the LM sessions own that glue). ``tail_factory(lp)``
+    overrides how a layer's elementwise tail callable is built (the
+    Pallas backend supplies jitted fused epilogues); the default is
+    the eager :func:`elementwise_tail`.
     """
     layers = list(layers)
     if layers and all(getattr(lp, "geometry", None) is not None
                       for lp in layers):
-        return _chain_spatial(layers, run_layer, x_q)
+        return _chain_spatial(layers, run_layer, x_q, x_scale,
+                              tail_factory)
     out = None
     for lp in layers:
         if out is not None:
@@ -320,42 +399,82 @@ def chain_layers(layers, run_layer, x_q) -> jnp.ndarray:
     return out
 
 
-def _chain_spatial(layers, run_layer, x_q) -> jnp.ndarray:
+def _chain_spatial(layers, run_layer, x_q, x_scale: float,
+                   tail_factory=None) -> jnp.ndarray:
     """Spatial NHWC chain over conv layers (resnet18/mobilenet_v2).
 
-    Layer ``pos`` consumes the output of layer ``pos - src_offset``
-    (the plain chain or a ResNet downsample shortcut reading the block
-    input), spatialized, pooled per the producer's ``pool`` glue and
-    requantized to the consumer's ``bits_a``. The residual adds and
-    activation functions between conv layers are elementwise glue
-    outside the GEMM programs (like softmax/norm in the LM frontends)
-    and are not modeled.
+    Layer ``pos`` consumes the stored post-tail codes of layer
+    ``pos - src_offset`` (the plain chain or a ResNet downsample
+    shortcut reading the block input). The chain tracks a
+    (codes, scale) pair per producer: a layer's GEMM result is first
+    scaled to absolute fp32 units (``run_layer`` applies the weight
+    scales but not the staged input's activation scale), then its
+    in-program fused elementwise tail runs — residual add of the
+    dequantized ``src_offset`` producer, activation, the geometry's
+    ``pool`` glue, and the write-back ``requant`` that produces the
+    codes + scale its consumers stage. Residual adds and relu6/hswish
+    are not scale invariant, which is why the tail must run in
+    absolute units rather than on raw codes. The final layer carries
+    no requant: its absolute fp32 output (the logits) is returned.
     """
-    outs: list[jnp.ndarray] = []
+    if tail_factory is None:
+        def tail_factory(lp):
+            return elementwise_tail(
+                tuple(getattr(lp, "elementwise", ()) or ()),
+                lp.geometry.pool)
+    # per-position (abs fp32 post-pool output, codes, scale); codes are
+    # materialized lazily for programs predating the elementwise stage
+    stored: list[list] = []
+
+    def _stage(pos: int, bits: int):
+        y_abs, codes, scale = stored[pos]
+        if codes is None:
+            codes, scale = requantize_with_scale(y_abs, bits)
+            stored[pos][1:] = [codes, scale]
+        return codes, scale
+
     for pos, lp in enumerate(layers):
         geom = lp.geometry
+        ew = tuple(getattr(lp, "elementwise", ()) or ())
         if pos == 0:
             x_sp = jnp.asarray(x_q, jnp.int8)
             if x_sp.shape != geom.in_shape:
                 raise ExecutionError(
                     f"conv chain input must be spatial "
                     f"{geom.in_shape}, got {tuple(x_sp.shape)}")
+            s_in = jnp.float32(x_scale)
         else:
             src = pos - geom.src_offset
             if src < 0:
                 raise ExecutionError(
                     f"layer {lp.index} reads producer {src}, which "
                     f"precedes the chain")
-            src_geom = layers[src].geometry
-            sp = apply_pool(spatialize(outs[src], src_geom),
-                            src_geom.pool)
-            if sp.shape != geom.in_shape:
+            x_sp, s_in = _stage(src, lp.bits_a)
+            if x_sp.shape != geom.in_shape:
                 raise ExecutionError(
                     f"layer {lp.index} expects spatial {geom.in_shape} "
-                    f"but producer {src} yields {tuple(sp.shape)}")
-            x_sp = requantize(sp, lp.bits_a)
-        outs.append(run_layer(lp.index, x_sp))
-    return outs[-1]
+                    f"but producer {src} yields {tuple(x_sp.shape)}")
+        y = spatialize(run_layer(lp.index, x_sp), geom) * s_in
+        residual = None
+        for op in ew:
+            if op.kind != "add":
+                continue
+            r = pos - op.src_offset
+            if r < 0:
+                raise ExecutionError(
+                    f"layer {lp.index} adds producer {r}, which "
+                    f"precedes the chain")
+            r_codes, r_scale = _stage(r, lp.bits_a)
+            if r_codes.shape != y.shape:
+                raise ExecutionError(
+                    f"layer {lp.index} residual add expects "
+                    f"{tuple(y.shape)} but producer {r} yields "
+                    f"{tuple(r_codes.shape)}")
+            residual = r_codes.astype(jnp.float32) * r_scale
+        y, codes, scale = tail_factory(lp)(y, residual)
+        stored.append([y, codes, scale])
+    # final layer: absolute fp32 logits in GEMM [rows, c_out] form
+    return stored[-1][0].reshape(-1, layers[-1].geometry.c_out)
 
 
 def synthetic_weights(index: int, k: int, n_lut: int, n_dsp: int,

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from repro.core import isa
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.compiler.lower import KV_APPEND_STAGE, KV_READ_STAGE
+from repro.compiler.lower import EW_STAGE, KV_APPEND_STAGE, KV_READ_STAGE
 from repro.compiler.program import CORE_NAMES, CoreProgram, LayerProgram
 from repro.compiler.runtime.base import ExecutionError, ExecutorBackend
 
@@ -126,6 +126,21 @@ class GoldenExecutor(ExecutorBackend):
                     raise ExecutionError(
                         f"L{lp.index} {core_name}: gather fetch addresses "
                         f"{i.ddr_base:#x}, expected one of {names}")
+            elif i.stage_ctrl == EW_STAGE:           # residual-add operand
+                # the fused elementwise tail reads the add producer's
+                # stored output codes; the chain hands the executor the
+                # dequantized operand, so only the addressing contract
+                # (some earlier layer's output segment, or the program
+                # input) is checked here.
+                mem = self.program.memory
+                names = tuple(f"L{j}.out" for j in range(lp.index)) \
+                    + ("act.in",)
+                if not any(s in mem and i.ddr_base == mem[s].base
+                           for s in names):
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: elementwise residual "
+                        f"fetch addresses {i.ddr_base:#x}, which is not "
+                        f"an earlier layer's output segment")
             elif i.stage_ctrl == KV_READ_STAGE:      # persistent KV/state
                 # decode programs (compiler/lower.py decorate_decode)
                 # read the layer's live cache/state segment; the session
@@ -216,6 +231,17 @@ class GoldenExecutor(ExecutorBackend):
                         f"L{lp.index} {core_name}: persistent write "
                         f"addresses {i.ddr_base:#x}, which is not a "
                         f"kv/state segment")
+                continue
+            if i.stage_ctrl == EW_STAGE:             # fused elementwise tail
+                # the stage-6 write-back re-quantizes the layer's final
+                # (post add/act/pool) output into L{i}.out; the chain
+                # computes the data (runtime/base.py apply_elementwise)
+                # — check addressing only, outside the output tiling.
+                if i.ddr_base != out_seg.base:
+                    raise ExecutionError(
+                        f"L{lp.index} {core_name}: elementwise write-back "
+                        f"addresses {i.ddr_base:#x}, expected segment "
+                        f"{out_seg.name}@{out_seg.base:#x}")
                 continue
             if i.ddr_base != out_seg.base:
                 raise ExecutionError(

@@ -52,6 +52,9 @@ class GlobalLayer:
     # full-layer spatial geometry for conv layers (filter shards carry
     # channel-sharded per-device geometries; this is the global one)
     geometry: ConvGeometry | None = None
+    # fused elementwise result tail (identical on every shard: the ops
+    # are size-free, so the global chain applies them once, full-width)
+    elementwise: tuple = ()
 
 
 def global_layers(bundle) -> list[GlobalLayer]:
@@ -91,7 +94,7 @@ def global_layers(bundle) -> list[GlobalLayer]:
             index=gi, name=lp.name, dims=dims, n_lut=n_lut,
             bits_w_lut=lp.bits_w_lut, bits_a=lp.bits_a,
             depthwise=lp.depthwise, placements=placements,
-            geometry=geom))
+            geometry=geom, elementwise=lp.elementwise))
     return out
 
 
@@ -192,10 +195,11 @@ class MultiDeviceExecutor:
                 outs.append(self.executors[d].run_layer(li, x_d))
         return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
-    def run(self, x_q) -> jnp.ndarray:
+    def run(self, x_q, x_scale: float = 1.0) -> jnp.ndarray:
         """Chain all global layers through the same ``chain_layers``
-        requantization (and, for conv programs, spatial NHWC staging)
-        as ``ExecutorBackend.run`` — the cross-device hand-off
-        (pipeline boundary or filter gather) carries exactly what the
-        single-device chain would."""
-        return chain_layers(self.layers, self.run_layer, x_q)
+        requantization + fused elementwise tail (and, for conv
+        programs, spatial NHWC staging) as ``ExecutorBackend.run`` —
+        the cross-device hand-off (pipeline boundary or filter gather)
+        carries exactly what the single-device chain would."""
+        return chain_layers(self.layers, self.run_layer, x_q,
+                            x_scale=x_scale)

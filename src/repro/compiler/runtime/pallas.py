@@ -59,7 +59,11 @@ from repro.core import isa
 from repro.kernels import ops as kops
 from repro.obs.metrics import METRICS
 from repro.compiler.program import CoreProgram, LayerProgram
-from repro.compiler.runtime.base import ExecutionError, ExecutorBackend
+from repro.compiler.runtime.base import (
+    ExecutionError,
+    ExecutorBackend,
+    elementwise_tail,
+)
 
 
 def _make_lut_fn(bits: int, mode: str):
@@ -177,6 +181,14 @@ class PallasExecutor(ExecutorBackend):
                 if key not in fns:
                     fns[key] = _make_fused_sp_fn(bits, lp.geometry, dw,
                                                  mode)
+                if lp.elementwise:
+                    # fused elementwise epilogue: one jitted call
+                    # applying the layer's add/act/pool/requant tail
+                    # (the exact jnp tail the golden chain runs eagerly)
+                    key = ("ew", lp.elementwise, lp.geometry.pool)
+                    if key not in fns:
+                        fns[key] = jax.jit(elementwise_tail(
+                            lp.elementwise, lp.geometry.pool))
         return fns
 
     @classmethod
@@ -241,6 +253,16 @@ class PallasExecutor(ExecutorBackend):
                                  layer=lp.index, n=lp.dims.n,
                                  n_lut=lp.n_lut):
             return fn(x_q, wts.w_lut, wts.s_lut, wts.w_dsp, wts.s_dsp)
+
+    def _elementwise_tail(self, lp: LayerProgram):
+        """The layer's fused (jitted, program-cached) elementwise
+        epilogue — falls back to the eager shared tail for layers
+        without one in the table."""
+        if lp.geometry is not None and lp.elementwise:
+            fn = self._fns.get(("ew", lp.elementwise, lp.geometry.pool))
+            if fn is not None:
+                return fn
+        return super()._elementwise_tail(lp)
 
     def _run_core(self, lp: LayerProgram, cp: CoreProgram, x_q,
                   w_codes, w_scales) -> jnp.ndarray:

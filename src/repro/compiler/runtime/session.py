@@ -28,9 +28,12 @@ The glue models the *functional* shape of a decode step over the
 compiled projection GEMMs — causal softmax attention with GQA over an
 int-coded KV cache, SiLU-gated MLPs, softmax-weighted MoE experts, a
 gated diagonal SSM recurrence — but (like the layer walk in
-``compiler/networks.py``) no norms or residual adds: the reference and
-the sessions apply exactly the same glue, so parity is meaningful
-without modeling the full model frontends.
+``compiler/networks.py``) no norms or residual adds for the LM
+decode path: the reference and the sessions apply exactly the same
+glue, so parity is meaningful without modeling the full model
+frontends. (CNN chains are different: their residual adds and
+activations *are* modeled, as each layer's in-program fused
+elementwise stage — see ``runtime/base.py`` ``chain_layers``.)
 """
 from __future__ import annotations
 
@@ -41,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.quant.uniform import fit_scale, qrange
+from repro.quant.uniform import _inv_hi, fit_scale, qrange
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.compiler.runtime.base import (
@@ -114,8 +117,7 @@ def _quant_with_scale(x: jnp.ndarray, bits: int):
 def _quant_rows_with_scale(x: jnp.ndarray, bits: int):
     """Per-row twin of :func:`_quant_with_scale` (one scale per batch
     row, bit-identical to it at batch 1) for per-slot KV appends."""
-    _, hi = qrange(bits)
-    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / hi
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) * _inv_hi(bits)
     lo, hi_q = qrange(bits)
     q = jnp.clip(jnp.round(x / s[:, None]), lo, hi_q).astype(jnp.int8)
     return q, s

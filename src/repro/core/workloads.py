@@ -53,6 +53,13 @@ class ConvSpec:
     # layer reads it: "" (none), "max" (3x3 stride-2 SAME max pool, the
     # ResNet stem) or "gap" (global average pool before the classifier).
     pool: str = ""
+    # Elementwise tail the layer applies to its own output: activation
+    # kind ("", "relu", "relu6", "hswish") and, for residual layers,
+    # the distance back to the add operand's producer (0 = no residual;
+    # ResNet conv_b adds 2 back, MobileNet pw adds 3 back). These lower
+    # into the program's fused elementwise stage.
+    act: str = ""
+    res_src: int = 0
 
     @property
     def out_hw(self) -> int:
@@ -89,13 +96,19 @@ def resnet18_specs() -> list[ConvSpec]:
     """ResNet-18 @224. Layer indices match the paper's Fig. 9/10 numbering
     (downsample projections land at layers 8, 13, 18)."""
     specs: list[ConvSpec] = [
-        ConvSpec("conv1", 3, 64, 7, 2, 224, is_first=True, pool="max"),
+        ConvSpec("conv1", 3, 64, 7, 2, 224, is_first=True, pool="max",
+                 act="relu"),
     ]
 
-    def block(idx, c_in, c_out, stride, hw):
+    def block(idx, c_in, c_out, stride, hw, ds=False):
+        # conv_a applies relu; conv_b carries the residual add + relu,
+        # unless a downsample projection follows the block — then the
+        # projection carries them (relu(conv_b + ds(x))) and conv_b
+        # writes its raw pre-activation output.
         out = [
-            ConvSpec(f"conv{idx}", c_in, c_out, 3, stride, hw),
-            ConvSpec(f"conv{idx+1}", c_out, c_out, 3, 1, hw // stride),
+            ConvSpec(f"conv{idx}", c_in, c_out, 3, stride, hw, act="relu"),
+            ConvSpec(f"conv{idx+1}", c_out, c_out, 3, 1, hw // stride,
+                     act="" if ds else "relu", res_src=0 if ds else 2),
         ]
         return out
 
@@ -103,16 +116,19 @@ def resnet18_specs() -> list[ConvSpec]:
     specs += block(2, 64, 64, 1, 56)
     specs += block(4, 64, 64, 1, 56)
     # layer2: 64 -> 128, stride 2; downsample at index 8
-    specs += block(6, 64, 128, 2, 56)
-    specs.append(ConvSpec("conv8_ds", 64, 128, 1, 2, 56, shortcut=True))
+    specs += block(6, 64, 128, 2, 56, ds=True)
+    specs.append(ConvSpec("conv8_ds", 64, 128, 1, 2, 56, shortcut=True,
+                          act="relu", res_src=1))
     specs += block(9, 128, 128, 1, 28)
     # layer3: 128 -> 256; downsample at index 13
-    specs += block(11, 128, 256, 2, 28)
-    specs.append(ConvSpec("conv13_ds", 128, 256, 1, 2, 28, shortcut=True))
+    specs += block(11, 128, 256, 2, 28, ds=True)
+    specs.append(ConvSpec("conv13_ds", 128, 256, 1, 2, 28, shortcut=True,
+                          act="relu", res_src=1))
     specs += block(14, 256, 256, 1, 14)
     # layer4: 256 -> 512; downsample at index 18
-    specs += block(16, 256, 512, 2, 14)
-    specs.append(ConvSpec("conv18_ds", 256, 512, 1, 2, 14, shortcut=True))
+    specs += block(16, 256, 512, 2, 14, ds=True)
+    specs.append(ConvSpec("conv18_ds", 256, 512, 1, 2, 14, shortcut=True,
+                          act="relu", res_src=1))
     specs += block(19, 512, 512, 1, 7)
     # global average pool feeds the classifier, a 1x1 "conv" on a 1x1 map
     specs[-1] = dataclasses.replace(specs[-1], pool="gap")
@@ -122,11 +138,13 @@ def resnet18_specs() -> list[ConvSpec]:
 
 def mobilenet_v2_specs() -> list[ConvSpec]:
     """MobileNet-V2 @224 (width 1.0): 52 convs + classifier."""
-    specs: list[ConvSpec] = [ConvSpec("conv0", 3, 32, 3, 2, 224, is_first=True)]
+    specs: list[ConvSpec] = [ConvSpec("conv0", 3, 32, 3, 2, 224,
+                                      is_first=True, act="relu")]
     hw = 112
 
     # t=1 bottleneck
-    specs.append(ConvSpec("b0_dw", 32, 32, 3, 1, hw, depthwise=True))
+    specs.append(ConvSpec("b0_dw", 32, 32, 3, 1, hw, depthwise=True,
+                          act="relu6"))
     specs.append(ConvSpec("b0_pw", 32, 16, 1, 1, hw))
 
     cfg = [  # (expansion t, c_out, repeats, stride)
@@ -143,15 +161,21 @@ def mobilenet_v2_specs() -> list[ConvSpec]:
         for r in range(n):
             stride = s if r == 0 else 1
             hidden = c_in * t
-            specs.append(ConvSpec(f"b{bi}_exp", c_in, hidden, 1, 1, hw))
+            specs.append(ConvSpec(f"b{bi}_exp", c_in, hidden, 1, 1, hw,
+                                  act="relu"))
             specs.append(ConvSpec(f"b{bi}_dw", hidden, hidden, 3, stride, hw,
-                                  depthwise=True))
+                                  depthwise=True, act="relu6"))
             hw = hw // stride
-            specs.append(ConvSpec(f"b{bi}_pw", hidden, c, 1, 1, hw))
+            # Linear bottleneck: no activation after the projection; the
+            # inverted residual adds the block input (3 layers back) on
+            # the repeats where stride == 1 and channels match.
+            specs.append(ConvSpec(f"b{bi}_pw", hidden, c, 1, 1, hw,
+                                  res_src=3 if r > 0 else 0))
             c_in = c
             bi += 1
 
-    specs.append(ConvSpec("conv_last", 320, 1280, 1, 1, hw, pool="gap"))
+    specs.append(ConvSpec("conv_last", 320, 1280, 1, 1, hw, pool="gap",
+                          act="relu"))
     specs.append(ConvSpec("fc", 1280, 1000, 1, 1, 1, is_last=True))
     return specs
 

@@ -180,7 +180,8 @@ class ProgramEvaluator:
                  target_latency_ms: float,
                  proxy: AccuracyProxy | None = None,
                  reward_lambda: float = 0.01, opt_level: int = 1,
-                 cache_size: int = 32, name: str = "dse"):
+                 cache_size: int = 32, name: str = "dse",
+                 accuracy_fn=None, measured_baseline: float = 100.0):
         self.specs = list(specs)
         self.device = device
         self.target_latency_ms = target_latency_ms
@@ -188,6 +189,14 @@ class ProgramEvaluator:
         self.reward_lambda = reward_lambda
         self.opt_level = opt_level
         self.name = name
+        #: optional measured-accuracy hook (``fn(program) -> percent``,
+        #: e.g. ``repro.eval.accuracy.make_accuracy_fn``): elite
+        #: correction then swaps the analytical AccuracyProxy term for
+        #: the agreement the compiled program actually measures —
+        #: against ``measured_baseline`` (100 = fp32 parity) instead of
+        #: the proxy's paper baseline.
+        self.accuracy_fn = accuracy_fn
+        self.measured_baseline = measured_baseline
         self._layers = specs_to_layers(self.specs)
         self._cache: collections.OrderedDict[str, tuple] = \
             collections.OrderedDict()
@@ -207,18 +216,20 @@ class ProgramEvaluator:
                 "size": len(self._cache), "maxsize": self._cache_size}
 
     def _entry(self, key: str, info: dict) -> tuple[list, bool]:
-        """LRU entry ``[program, sim_cycles | None]`` for a config.
+        """LRU entry ``[program, sim_cycles | None, measured_acc |
+        None]`` for a config.
 
-        Cycles are computed lazily (``_cycles``): :meth:`verify` only
-        needs the program, and a full-size CNN simulation is
-        minutes-long — functional verification must not pay for it.
+        Cycles and measured accuracy are computed lazily (``_cycles`` /
+        ``_measured``): :meth:`verify` only needs the program, and a
+        full-size CNN simulation is minutes-long — functional
+        verification must not pay for it.
         """
         if key in self._cache:
             self._cache.move_to_end(key)
             self._hits += 1
             return self._cache[key], True
         self._misses += 1
-        entry = [self.compile(info), None]
+        entry = [self.compile(info), None, None]
         self._cache[key] = entry
         while len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)
@@ -228,6 +239,11 @@ class ProgramEvaluator:
         if entry[1] is None:
             entry[1] = int(simulate_program(entry[0]).total_cycles)
         return entry[1]
+
+    def _measured(self, entry: list) -> float:
+        if entry[2] is None:
+            entry[2] = float(self.accuracy_fn(entry[0]))
+        return entry[2]
 
     # -- config -> program ---------------------------------------------------
 
@@ -269,9 +285,18 @@ class ProgramEvaluator:
             n_instructions=entry[0].n_instructions, cached=cached)
 
     def correct(self, info: dict) -> tuple[float, dict]:
-        """Elite-correction entry point: returns the simulated reward
-        plus a *new* info dict re-tagged ``reward_source="simulated"``
-        and carrying both latency columns."""
+        """Elite-correction entry point: returns the corrected reward
+        plus a *new* info dict carrying both latency columns.
+
+        Without an ``accuracy_fn`` the correction swaps the latency
+        tier only (``reward_source="simulated"``). With one, the
+        accuracy term is swapped too: the compiled program is executed
+        over the validation stream and the Eq.-18 reward is re-applied
+        at (simulated latency, **measured** agreement) —
+        ``reward_source="measured"``, ``measured_acc`` recorded — so
+        elite re-ranking trades off latency against accuracy the
+        program actually delivers, not the proxy's monotone estimate.
+        """
         res = self.evaluate(info)
         corrected = dict(info)
         corrected.update({
@@ -281,7 +306,20 @@ class ProgramEvaluator:
             "sim_gap_pct": res.gap_pct,
             "sim_cycles": res.sim_cycles,
         })
-        return res.reward_simulated, corrected
+        reward = res.reward_simulated
+        if self.accuracy_fn is not None:
+            key = self.config_key(info)
+            entry, _cached = self._entry(key, info)
+            acc_m = self._measured(entry)
+            reward = shaped_reward(res.simulated_ms,
+                                   self.target_latency_ms, acc_m,
+                                   self.measured_baseline,
+                                   self.reward_lambda)
+            corrected.update({
+                "reward_source": "measured",
+                "measured_acc": acc_m,
+            })
+        return reward, corrected
 
     # -- functional verification ----------------------------------------------
 

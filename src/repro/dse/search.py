@@ -17,6 +17,13 @@ program that would actually ship. ``network`` may be a CNN workload
 *or* any registry arch id (scored at ``seq_len`` tokens; must be a
 perfect square — see ``dse.evaluator.gemm_specs``).
 
+Passing ``accuracy_fn`` (e.g. ``repro.eval.accuracy.make_accuracy_fn``)
+upgrades elite correction to a *third* signal: each elite's compiled
+program is run over a held-out eval stream and its **measured** top-1
+agreement replaces the ``AccuracyProxy`` term in the corrected reward
+(``reward_source == "measured"``). The calibration rows then trace an
+accuracy-vs-latency frontier over the elite set — see ``docs/dse.md``.
+
 The paper explores 900 episodes; the default here is smaller so the
 benchmark suite stays fast — pass ``episodes=900`` to match.
 """
@@ -45,7 +52,7 @@ from repro.obs import MetricsRegistry
 CALIBRATION_FIELDS = (
     "rank", "key", "reward_source", "reward_analytical",
     "reward_simulated", "analytical_ms", "simulated_ms", "gap_pct",
-    "acc", "mean_bw", "mean_ba", "mean_ratio",
+    "acc", "measured_acc", "mean_bw", "mean_ba", "mean_ratio",
 )
 
 
@@ -143,6 +150,7 @@ def _calibration_row(rank: int, elite) -> dict:
         "simulated_ms": info.get("simulated_latency_ms"),
         "gap_pct": info.get("sim_gap_pct"),
         "acc": info["acc"],
+        "measured_acc": info.get("measured_acc"),
         "mean_bw": float(np.mean(info["bw_lut"])),
         "mean_ba": float(np.mean(info["ba"])),
         "mean_ratio": float(np.mean(info["ratios"])),
@@ -181,6 +189,7 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
                simulate_elites: bool = False, top_k: int = 4,
                sim_every: int = 20, opt_level: int = 1,
                cache_size: int = 32, seq_len: int = 64,
+               accuracy_fn=None,
                metrics: MetricsRegistry | None = None) -> SearchResult:
     reg = metrics if metrics is not None else MetricsRegistry()
     dev: FPGADevice = DEVICES[device]
@@ -194,7 +203,8 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
     evaluator = ProgramEvaluator(
         layer_specs, dev, target_latency_ms, proxy=proxy,
         reward_lambda=env_cfg.reward_lambda, opt_level=opt_level,
-        cache_size=cache_size, name=network) if simulate_elites else None
+        cache_size=cache_size, name=network,
+        accuracy_fn=accuracy_fn) if simulate_elites else None
     elites = EliteSet(top_k)
 
     best_reward = -np.inf
@@ -249,7 +259,8 @@ def run_search(network: str = "resnet18", device: str = "XC7Z020",
         if winner is not None:
             result.best_reward = float(winner.reward)
             result.best_info = winner.info
-            result.reward_source = "simulated"
+            result.reward_source = winner.info.get("reward_source",
+                                                   "simulated")
             result.analytical_latency_ms = \
                 winner.info["analytical_latency_ms"]
             result.simulated_latency_ms = \

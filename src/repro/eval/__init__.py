@@ -1,0 +1,24 @@
+"""Dataset-scale validation of compiled programs against their models."""
+from repro.eval.accuracy import (
+    AGREEMENT_FLOOR,
+    AccuracyReport,
+    bind_folded_weights,
+    build_reference,
+    compile_quantized_cnn,
+    evaluate_agreement,
+    fold_to_matrix,
+    make_accuracy_fn,
+    quantize_folded_matrix,
+)
+
+__all__ = [
+    "AGREEMENT_FLOOR",
+    "AccuracyReport",
+    "bind_folded_weights",
+    "build_reference",
+    "compile_quantized_cnn",
+    "evaluate_agreement",
+    "fold_to_matrix",
+    "make_accuracy_fn",
+    "quantize_folded_matrix",
+]

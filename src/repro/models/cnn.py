@@ -134,8 +134,18 @@ def conv2d(x: jax.Array, w: jax.Array, s: ConvSpec) -> jax.Array:
 
 
 def conv_layer(p: dict, x: jax.Array, s: ConvSpec,
-               q: LayerQuantConfig | None, relu: bool = True) -> jax.Array:
-    """NHWC conv + folded norm + optional relu, with hybrid quant."""
+               q: LayerQuantConfig | None, relu: bool = True,
+               norm: jax.Array | None = None,
+               capture: dict | None = None) -> jax.Array:
+    """NHWC conv + folded norm + optional relu, with hybrid quant.
+
+    ``norm`` freezes the layer's RMS statistic to a precomputed value
+    (inference mode — the batch statistic is data-dependent, so two
+    different batches normalize differently; frozen norms are what the
+    accelerator folds into its weights). ``capture`` records the
+    statistic actually used under ``s.name`` (see
+    :func:`calibrate_norms`).
+    """
     w = p["w"]
     if q is not None:
         a_bits = 8 if (s.is_first or s.is_last) else q.a_bits
@@ -152,8 +162,13 @@ def conv_layer(p: dict, x: jax.Array, s: ConvSpec,
     # BN-style per-channel RMS normalization (mean-free): stabilizes
     # from-scratch QAT; folds into the requantization scale at inference
     # exactly like BN does on the accelerator.
-    rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=(0, 1, 2),
-                            keepdims=True) + 1e-6)
+    if norm is None:
+        rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=(0, 1, 2),
+                                keepdims=True) + 1e-6)
+    else:
+        rms = jnp.asarray(norm, jnp.float32).reshape(1, 1, 1, -1)
+    if capture is not None:
+        capture[s.name] = rms.reshape(-1)
     out = (out / rms) * p["scale"] + p["bias"]
     if relu:
         out = jax.nn.relu6(out) if s.depthwise else jax.nn.relu(out)
@@ -170,14 +185,17 @@ def _qc(quant_cfgs, i):
 
 
 def resnet18_forward(params: dict, x: jax.Array, cfg: CNNConfig,
-                     quant_cfgs: Sequence[LayerQuantConfig] | None = None
-                     ) -> jax.Array:
+                     quant_cfgs: Sequence[LayerQuantConfig] | None = None,
+                     norms: dict | None = None,
+                     capture: dict | None = None) -> jax.Array:
     specs = {s.name: s for s in specs_for(cfg)}
     qi = {s.name: i for i, s in enumerate(specs_for(cfg))}
 
     def conv(name, x, relu=True):
         return conv_layer(params[name], x, specs[name],
-                          _qc(quant_cfgs, qi[name]), relu)
+                          _qc(quant_cfgs, qi[name]), relu,
+                          norm=None if norms is None else norms[name],
+                          capture=capture)
 
     x = conv("conv1", x)
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
@@ -209,15 +227,18 @@ def resnet18_forward(params: dict, x: jax.Array, cfg: CNNConfig,
 
 
 def mobilenet_v2_forward(params: dict, x: jax.Array, cfg: CNNConfig,
-                         quant_cfgs: Sequence[LayerQuantConfig] | None = None
-                         ) -> jax.Array:
+                         quant_cfgs: Sequence[LayerQuantConfig] | None = None,
+                         norms: dict | None = None,
+                         capture: dict | None = None) -> jax.Array:
     all_specs = specs_for(cfg)
     specs = {s.name: s for s in all_specs}
     qi = {s.name: i for i, s in enumerate(all_specs)}
 
     def conv(name, x, relu=True):
         return conv_layer(params[name], x, specs[name],
-                          _qc(quant_cfgs, qi[name]), relu)
+                          _qc(quant_cfgs, qi[name]), relu,
+                          norm=None if norms is None else norms[name],
+                          capture=capture)
 
     x = conv("conv0", x)
     x = conv("b0_dw", x)
@@ -241,13 +262,59 @@ def mobilenet_v2_forward(params: dict, x: jax.Array, cfg: CNNConfig,
 
 
 def forward(params: dict, x: jax.Array, cfg: CNNConfig,
-            quant_cfgs: Sequence[LayerQuantConfig] | None = None
-            ) -> jax.Array:
+            quant_cfgs: Sequence[LayerQuantConfig] | None = None,
+            norms: dict | None = None,
+            capture: dict | None = None) -> jax.Array:
     if cfg.arch == "resnet18":
-        return resnet18_forward(params, x, cfg, quant_cfgs)
+        return resnet18_forward(params, x, cfg, quant_cfgs, norms, capture)
     if cfg.arch == "mobilenet_v2":
-        return mobilenet_v2_forward(params, x, cfg, quant_cfgs)
+        return mobilenet_v2_forward(params, x, cfg, quant_cfgs, norms,
+                                    capture)
     raise ValueError(f"unknown CNN arch {cfg.arch!r}")
+
+
+# ---------------------------------------------------------------------------
+# Inference-mode norm freezing + weight folding
+# ---------------------------------------------------------------------------
+
+
+def calibrate_norms(params: dict, x: jax.Array, cfg: CNNConfig) -> dict:
+    """Freeze every layer's data-dependent RMS statistic on one
+    calibration batch: ``{name: rms[c_out]}``.
+
+    The batch statistic makes the forward a function of the *batch*,
+    not the sample — two batches normalize differently, so dataset
+    evaluation (and the accelerator, whose programs have no norm op)
+    needs the statistic pinned. Evaluate with
+    ``forward(..., norms=calibrate_norms(...))``.
+    """
+    capture: dict = {}
+    forward(params, x, cfg, capture=capture)
+    return capture
+
+
+def fold_inference_weights(params: dict, cfg: CNNConfig,
+                           norms: dict) -> dict:
+    """Fold the frozen per-channel norm into effective conv weights:
+    ``w_eff[..., c] = w[..., c] * scale[c] / rms[c]`` — exactly the
+    BN-fold the accelerator deploys, so a compiled program binding
+    quantized ``w_eff`` reproduces the frozen-norm network with no
+    norm op in the instruction stream.
+
+    Requires ``bias == 0`` everywhere (the compiled GEMM+elementwise
+    pipeline has no bias stage to fold a nonzero bias into).
+    """
+    folded = {}
+    for s in specs_for(cfg):
+        p = params[s.name]
+        if float(jnp.max(jnp.abs(p["bias"]))) != 0.0:
+            raise ValueError(
+                f"layer {s.name} has a nonzero norm bias; the compiled "
+                f"pipeline has no bias stage to fold it into")
+        gain = (p["scale"] / jnp.asarray(norms[s.name], jnp.float32)
+                ).reshape(1, 1, 1, -1)
+        folded[s.name] = p["w"] * gain
+    return folded
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:

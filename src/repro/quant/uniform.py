@@ -34,19 +34,29 @@ def dequantize(q: jax.Array, s: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * s
 
 
+def _inv_hi(bits: int) -> jnp.float32:
+    """Pre-rounded f32 reciprocal of beta_hat. Scales multiply by this
+    instead of dividing by ``hi``: XLA rewrites division-by-constant
+    into multiplication by the f32-rounded reciprocal under jit, so the
+    divide form computes *different* scales eagerly vs jitted (a 1-ulp
+    drift that compounds across a chained network). The explicit
+    reciprocal-multiply is what jit produces anyway, and a multiply of
+    identical operands is bit-identical in both modes."""
+    _, hi = qrange(bits)
+    return jnp.float32(1.0 / hi)
+
+
 def fit_scale(x: jax.Array, bits: int, eps: float = 1e-8) -> jax.Array:
     """Symmetric max-abs scale: s = max|x| / beta_hat (per tensor)."""
-    _, hi = qrange(bits)
-    return jnp.maximum(jnp.max(jnp.abs(x)), eps) / hi
+    return jnp.maximum(jnp.max(jnp.abs(x)), eps) * _inv_hi(bits)
 
 
 def fit_scale_per_channel(x: jax.Array, bits: int, axis: int = 0,
                           eps: float = 1e-8) -> jax.Array:
     """Per-channel (filter-wise) scales along ``axis``; keepdims for broadcast."""
-    _, hi = qrange(bits)
     reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
     m = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
-    return jnp.maximum(m, eps) / hi
+    return jnp.maximum(m, eps) * _inv_hi(bits)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

@@ -85,6 +85,34 @@ def test_closure_is_a_real_check(single_prog):
     assert tracer.counters.closure_errors() != []
 
 
+def test_closure_covers_elementwise_stage():
+    """Conv chains carry stage-6 fused-tail fetch/result records; their
+    cycles must be inside the accounting (closure holds with the tail
+    present), and corrupting an elementwise-bearing track's busy span
+    must break closure."""
+    from repro.compiler.lower import EW_STAGE
+    prog = compile_network("resnet18", in_hw=28, width=0.25)
+    assert any(lp.elementwise for lp in prog.layers)
+    tracer = Tracer()
+    ps = simulate_program(prog, tracer=tracer)
+    c = tracer.counters
+    assert c.makespan == ps.total_cycles
+    assert c.closure_errors() == []
+    # busy cycles of the stage-6 records are nonzero, so a corrupted
+    # tail span cannot hide in the idle remainder
+    lp = next(lp for lp in prog.layers if lp.elementwise)
+    cp = lp.lut if lp.lut is not None else lp.dsp
+    ew_cycles = sum(op.cycles for s in ("fetch", "result")
+                    for op in cp.streams[s]
+                    if getattr(op.instr, "stage_ctrl", None) == EW_STAGE)
+    assert ew_cycles > 0
+    track = f"dev0:{'lut' if cp is lp.lut else 'dsp'}/result"
+    tc = c.tracks[track] if track in c.tracks else \
+        next(iter(c.tracks.values()))
+    tc.busy += ew_cycles
+    assert c.closure_errors() != []
+
+
 # ---------------------------------------------------------------------------
 # trace JSON: schema + determinism
 # ---------------------------------------------------------------------------

@@ -64,6 +64,12 @@ KIND_BLOBS = {
          "p99_ms": 2400.0, "workers": 2, "utilization_pct": 91.0,
          "bit_exact": True},
         "continuous: 0.9 req/s"),
+    "accuracy.eval": (
+        {"network": "resnet18", "backend": "pallas", "n_samples": 10000,
+         "agreement": 0.9932, "top1_compiled": 0.97, "top1_ref": 0.98,
+         "agreement_floor": 0.95, "meets_floor": True,
+         "latency_ms": 0.39},
+        "99.32% top-1 agreement"),
     "serve.fleet.compare": (
         {"continuous_req_per_s": 0.9, "serial_req_per_s": 0.3,
          "speedup_x": 3.0, "continuous_beats_serial": True},
